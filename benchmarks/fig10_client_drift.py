@@ -1,0 +1,47 @@
+"""Paper Figure 10: client drift — average pairwise cosine similarity of
+client updates across heterogeneity levels.
+
+Claim validated: similarity decays with heterogeneity for the naive method
+and stays higher for LoRA-A² (implicit clustering reduces conflict)."""
+import numpy as np
+
+from benchmarks.common import LOCAL_EPOCHS, SEED, save
+from repro.configs.base import get_config
+from repro.core.federation import FedConfig, run_federated
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_classification
+
+
+def avg_offdiag(M):
+    M = np.asarray(M)
+    n = M.shape[0]
+    return float((M.sum() - np.trace(M)) / (n * n - n))
+
+
+def main(quick=False):
+    cfg = get_config("roberta-sim")
+    rows = []
+    alphas = [0.01] if quick else [0.5, 0.1, 0.01]
+    for alpha in alphas:
+        train, test = make_classification(SEED, n_classes=20,
+                                          vocab=cfg.vocab_size, seq_len=24,
+                                          n_train=1600, n_test=480)
+        parts = dirichlet_partition(SEED, train.labels, 8, alpha)
+        for method in ("fl_lora", "lora_a2"):
+            fed = FedConfig(method=method, rank=2, global_rank=8, rounds=4,
+                            local_epochs=LOCAL_EPOCHS, batch_size=32,
+                            n_clients=8, seed=SEED, eval_every=4,
+                            track_similarity=True)
+            hist = run_federated(cfg, fed, train, test, parts)
+            sim = avg_offdiag(hist["update_cosine"][-1])
+            rows.append({"method": method, "alpha": alpha,
+                         "avg_grad_similarity": sim})
+    save("fig10_client_drift", rows)
+    for r in rows:
+        print(f"fig10/{r['method']}_a{r['alpha']},0,"
+              f"avg_sim={r['avg_grad_similarity']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Paper Figure 8: convergence curves (accuracy per round, rank 2).
+Claim validated: LoRA-A² converges at a speed comparable to baselines."""
+from benchmarks.common import run, save
+
+
+def main(quick=False):
+    rows = []
+    methods = ["lora_a2"] if quick else ["fl_lora", "ffa_lora", "lora_a2"]
+    for method in methods:
+        r = run(method, rank=2, alpha=0.1, rounds=12)
+        rows.append(r)
+    save("fig8_convergence", rows)
+    for r in rows:
+        curve = ";".join(f"{a:.3f}" for a in r["acc_curve"])
+        print(f"fig8/{r['method']},{r['wall_s']*1e6:.0f},curve={curve}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Benchmark harness — one module per paper table/figure.
+
+``python -m benchmarks.run``           quick pass (reduced grids, ~minutes)
+``python -m benchmarks.run --full``    full grids (paper-shaped axes)
+``python -m benchmarks.run --only table1 table4``
+
+Prints ``name,us_per_call,derived`` CSV lines; JSON artifacts land in
+artifacts/bench/.  The dry-run/roofline deliverables live separately in
+launch/dryrun.py + launch/roofline.py (they need 512 forced host devices).
+"""
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (comm_cost, fig3_rank_selection, fig6_alternating,
+                        fig8_convergence, fig10_client_drift,
+                        table1_main_grid, table2_model_scale, table4_dp,
+                        table7_pathologic, table8_resource_het,
+                        table9_criterion)
+
+TABLES = {
+    "table1": table1_main_grid.main,
+    "table2": table2_model_scale.main,
+    "table4": table4_dp.main,
+    "table7": table7_pathologic.main,
+    "table8": table8_resource_het.main,
+    "table9": table9_criterion.main,
+    "fig3": fig3_rank_selection.main,
+    "fig6": fig6_alternating.main,
+    "fig8": fig8_convergence.main,
+    "fig10": fig10_client_drift.main,
+    "comm": comm_cost.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full grids (slower; default is the quick pass)")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    names = args.only or list(TABLES)
+    failures = []
+    t0 = time.time()
+    for name in names:
+        print(f"# === {name} ===", file=sys.stderr)
+        try:
+            TABLES[name](quick=not args.full)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    print(f"# total {time.time()-t0:.0f}s", file=sys.stderr)
+    if failures:
+        for n, e in failures:
+            print(f"# FAILED {n}: {e}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

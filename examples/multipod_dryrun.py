@@ -1,0 +1,26 @@
+"""Example: one multi-pod dry-run — lower + compile the federated LoRA-A²
+train step on the 2x16x16 production mesh for one architecture, print the
+memory/cost analysis (this is what launch/dryrun.py does for the full grid).
+
+    PYTHONPATH=src python examples/multipod_dryrun.py --arch llama3-8b
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+
+from repro.launch import dryrun  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+    rec = dryrun.run_one(args.arch, args.shape, multi_pod=True, probes=False)
+    print("pod-axis collectives (federated aggregation):",
+          rec["full"]["collectives"]["counts"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Quickstart: federated LoRA-A² fine-tuning in ~40 lines.
+
+Runs the paper's algorithm (alternating freeze + adaptive rank selection)
+with 4 clients on a synthetic non-IID classification task, comparing against
+naive FL+LoRA.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs.base import get_config
+from repro.core.federation import FedConfig, run_federated
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_classification
+
+# 1. model: a reduced RoBERTa-class encoder with a frozen classifier head
+cfg = get_config("roberta-sim")
+
+# 2. data: synthetic intent-classification corpus, Dirichlet(0.05) non-IID
+train, test = make_classification(0, n_classes=8, vocab=cfg.vocab_size,
+                                  seq_len=24, n_train=800, n_test=240)
+clients = dirichlet_partition(0, train.labels, n_clients=4, alpha=0.05)
+
+# 3. federated fine-tuning: LoRA-A² with rank budget 2 out of a rank-8
+#    global adapter, 8 rounds x 2 local epochs
+for method in ("lora_a2", "fl_lora"):
+    fed = FedConfig(method=method, rank=2, global_rank=8, rounds=8,
+                    local_epochs=2, batch_size=32, n_clients=4, eval_every=4)
+    hist = run_federated(cfg, fed, train, test, clients)
+    print(f"{method:8s}  acc={hist['acc'][-1]:.3f}  "
+          f"uploaded={hist['uploaded'][-1]:.2e} params")

@@ -1,0 +1,66 @@
+"""npz-based pytree checkpointing (no orbax in this environment).
+
+Flattens nested dict/list pytrees to path-keyed arrays; restores exactly.
+Used by the federated server to persist global adapters between rounds and
+by the drivers for resume.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+
+import jax
+import numpy as np
+
+SEP = "::"
+
+
+def save(path, tree, metadata=None):
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k in node:
+                rec(prefix + [str(k)], node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(prefix + [f"#{i}"], v)
+        else:
+            flat[SEP.join(prefix)] = np.asarray(node)
+
+    rec([], tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    meta = json.dumps(metadata or {})
+    np.savez(path, __meta__=np.frombuffer(meta.encode(), np.uint8), **flat)
+
+
+def restore(path):
+    """Returns (tree, metadata).  List nodes come back as lists."""
+    z = np.load(path if path.endswith(".npz") else path + ".npz")
+    meta = {}
+    tree = {}
+    for key in z.files:
+        if key == "__meta__":
+            meta = json.loads(bytes(z[key]).decode())
+            continue
+        parts = key.split(SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = z[key]
+    return _listify(tree), meta
+
+
+def _listify(node):
+    if not isinstance(node, dict):
+        return node
+    if node and all(k.startswith("#") for k in node):
+        return [_listify(node[f"#{i}"]) for i in range(len(node))]
+    return {k: _listify(v) for k, v in node.items()}
+
+
+def tree_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.allclose(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))

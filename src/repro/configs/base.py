@@ -1,0 +1,194 @@
+"""Config system: ModelConfig, layer-group patterns, input shapes, registry.
+
+Every assigned architecture lives in its own module (one ``<arch>.py`` per
+arch) and registers itself here via ``register``.  ``get_config(arch_id)``
+resolves the public ``--arch`` ids (e.g. ``qwen2.5-32b``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer patterns
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One position in a repeating layer pattern.
+
+    kind: 'attn'  -> attention + dense MLP block
+          'moe'   -> attention + MoE block
+          'rwkv6' -> RWKV-6 time-mix + channel-mix (attention free)
+          'mamba2'-> Mamba-2 SSD block
+          'shared_attn' -> attention+MLP block whose weights are SHARED across
+                           all periods (zamba2); stored outside the scan.
+    count:  how many consecutive copies of this spec per period.
+    window: sliding-window size for attention (None = global/full causal).
+    """
+
+    kind: str
+    count: int = 1
+    window: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm | encoder
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 1_000_000.0
+    rope_mode: str = "1d"  # '1d' | 'mrope' | 'none'
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # t/h/w split of head_dim//2
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # expert-FFN sharding strategy (see EXPERIMENTS.md §Perf):
+    #  'fsdp_gather' — baseline: f over data; weights all-gathered per use
+    #  'fshard'      — keep f sharded through the FFN; replicate the (small)
+    #                  dispatched activations over data instead
+    moe_variant: str = "fsdp_gather"
+    # --- SSM ---
+    ssm_state: int = 0          # mamba2 state size N
+    ssm_expand: int = 2         # mamba2 inner expansion
+    ssm_head_dim: int = 64      # mamba2 head dim P
+    rwkv_head_dim: int = 64
+    # --- layer pattern (None -> uniform from family) ---
+    pattern: Tuple[LayerSpec, ...] = ()
+    n_periods: int = 0
+    # --- long-context policy ---
+    long_context_window: Optional[int] = None  # window adopted for long_500k
+    # --- modality frontend stub ('audio' | 'vision' | None) ---
+    frontend: Optional[str] = None
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    # --- LoRA attach points ---
+    lora_targets: Tuple[str, ...] = ("q", "k", "v", "o", "gate", "up", "down")
+    # --- encoder/classifier head (paper-faithful track) ---
+    is_encoder: bool = False
+    n_classes: int = 0
+    source: str = ""  # citation
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if not self.pattern:
+            kind = {
+                "dense": "attn", "audio": "attn", "vlm": "attn", "encoder": "attn",
+                "moe": "moe", "ssm": "rwkv6", "hybrid": "mamba2",
+            }[self.family]
+            object.__setattr__(self, "pattern", (LayerSpec(kind=kind, count=1),))
+            object.__setattr__(self, "n_periods", self.n_layers)
+        assert self.layers_per_period * self.n_periods == self.n_layers, (
+            self.name, self.pattern, self.n_periods, self.n_layers)
+
+    @property
+    def layers_per_period(self) -> int:
+        return sum(s.count for s in self.pattern)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family variant for CPU smoke tests (spec: <=2 layers,
+        d_model<=512, <=4 experts)."""
+        pattern = tuple(dataclasses.replace(s, count=1) for s in self.pattern)
+        n_periods = 1 if len(pattern) > 1 else 2
+        n_layers = sum(s.count for s in pattern) * n_periods
+        n_heads = 4
+        n_kv = max(1, min(self.n_kv_heads, 2))
+        if self.n_kv_heads == self.n_heads:
+            n_kv = n_heads
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=n_layers,
+            d_model=128,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=32,
+            d_ff=256,
+            vocab_size=512,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=32,
+            rwkv_head_dim=32,
+            mrope_sections=(4, 6, 6),
+            pattern=pattern,
+            n_periods=n_periods,
+            dtype="float32",
+            n_classes=self.n_classes if self.n_classes else 0,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str  # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524_288, 1),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register(arch_id: str, fn):
+    _REGISTRY[arch_id] = fn
+    return fn
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    _ensure_loaded()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]()
+
+
+def list_archs():
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from repro.configs import (  # noqa: F401
+        rwkv6_7b, qwen2_7b, dbrx_132b, kimi_k2_1t_a32b, gemma3_12b,
+        musicgen_medium, zamba2_2p7b, llama3_8b, qwen2p5_32b, qwen2_vl_7b,
+        roberta_base,
+    )

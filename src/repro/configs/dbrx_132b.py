@@ -1,0 +1,24 @@
+"""DBRX-132B — 16-expert top-4 fine-grained MoE, GQA kv=8 [hf:databricks/dbrx-base]."""
+from repro.configs.base import ModelConfig, register
+
+
+def make():
+    return ModelConfig(
+        name="dbrx-132b",
+        family="moe",
+        n_layers=40,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=10752,
+        vocab_size=100352,
+        n_experts=16,
+        top_k=4,
+        rope_theta=500_000.0,
+        long_context_window=8192,
+        source="DBRX [hf:databricks/dbrx-base]",
+    )
+
+
+register("dbrx-132b", make)

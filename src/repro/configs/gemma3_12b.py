@@ -1,0 +1,28 @@
+"""Gemma-3 12B — dense GQA kv=8, 5:1 local(window 1024):global interleave,
+128k context [hf:google/gemma-3-1b-pt]."""
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+
+def make():
+    return ModelConfig(
+        name="gemma3-12b",
+        family="dense",
+        n_layers=48,
+        d_model=3840,
+        n_heads=16,
+        n_kv_heads=8,
+        head_dim=256,
+        d_ff=15360,
+        vocab_size=262144,
+        rope_theta=1_000_000.0,
+        pattern=(LayerSpec("attn", count=5, window=1024),
+                 LayerSpec("attn", count=1, window=None)),
+        n_periods=8,
+        # long_500k: local layers already windowed; global layers keep the
+        # full (seq-sharded) cache -- no extra variant needed.
+        long_context_window=None,
+        source="Gemma 3 [hf:google/gemma-3-1b-pt]",
+    )
+
+
+register("gemma3-12b", make)

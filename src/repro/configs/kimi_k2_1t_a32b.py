@@ -1,0 +1,26 @@
+"""Kimi K2 — trillion-param MoE, 384 experts top-8, fine-grained d_ff=2048
+[arXiv:2501.kimi2].  MLA approximated as GQA(kv=8) per the assignment table;
+the first dense layer is made MoE like the rest (see DESIGN.md §5)."""
+from repro.configs.base import ModelConfig, register
+
+
+def make():
+    return ModelConfig(
+        name="kimi-k2-1t-a32b",
+        family="moe",
+        n_layers=61,
+        d_model=7168,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=2048,
+        vocab_size=163840,
+        n_experts=384,
+        top_k=8,
+        rope_theta=500_000.0,
+        long_context_window=8192,
+        source="Kimi K2 [arXiv:2501.kimi2]",
+    )
+
+
+register("kimi-k2-1t-a32b", make)

@@ -1,0 +1,22 @@
+"""Llama-3 8B — dense GQA kv=8, 128k vocab [arXiv:2407.21783]."""
+from repro.configs.base import ModelConfig, register
+
+
+def make():
+    return ModelConfig(
+        name="llama3-8b",
+        family="dense",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=128256,
+        rope_theta=500_000.0,
+        long_context_window=8192,
+        source="Llama 3 [arXiv:2407.21783]",
+    )
+
+
+register("llama3-8b", make)

@@ -1,0 +1,25 @@
+"""MusicGen-medium — decoder-only transformer over EnCodec tokens
+[arXiv:2306.05284].  The EnCodec frontend (4-codebook delay interleave) is a
+stub per the audio carve-out: input_specs hands the decoder summed codebook
+embeddings; vocab is the per-codebook 2048-entry table."""
+from repro.configs.base import ModelConfig, register
+
+
+def make():
+    return ModelConfig(
+        name="musicgen-medium",
+        family="audio",
+        n_layers=48,
+        d_model=1536,
+        n_heads=24,
+        n_kv_heads=24,  # MHA
+        d_ff=6144,
+        vocab_size=2048,
+        rope_mode="none",   # musicgen uses learned sinusoidal; we use none+abs stub
+        frontend="audio",
+        long_context_window=8192,
+        source="MusicGen [arXiv:2306.05284]",
+    )
+
+
+register("musicgen-medium", make)

@@ -1,0 +1,23 @@
+"""Qwen2-7B — dense GQA (kv=4), QKV bias [arXiv:2407.10671]."""
+from repro.configs.base import ModelConfig, register
+
+
+def make():
+    return ModelConfig(
+        name="qwen2-7b",
+        family="dense",
+        n_layers=28,
+        d_model=3584,
+        n_heads=28,
+        n_kv_heads=4,
+        head_dim=128,
+        d_ff=18944,
+        vocab_size=152064,
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        long_context_window=8192,
+        source="Qwen2 [arXiv:2407.10671]",
+    )
+
+
+register("qwen2-7b", make)

@@ -1,0 +1,29 @@
+"""Qwen2-VL 7B — LLM backbone with M-RoPE + dynamic-resolution vision
+[arXiv:2409.12191].  The ViT encoder + projector is a stub per the VLM
+carve-out: input_specs hands the decoder patch embeddings and 3D (t,h,w)
+M-RoPE position ids."""
+from repro.configs.base import ModelConfig, register
+
+
+def make():
+    return ModelConfig(
+        name="qwen2-vl-7b",
+        family="vlm",
+        n_layers=28,
+        d_model=3584,
+        n_heads=28,
+        n_kv_heads=4,
+        head_dim=128,
+        d_ff=18944,
+        vocab_size=152064,
+        qkv_bias=True,
+        rope_mode="mrope",
+        mrope_sections=(16, 24, 24),
+        rope_theta=1_000_000.0,
+        frontend="vision",
+        long_context_window=8192,
+        source="Qwen2-VL [arXiv:2409.12191]",
+    )
+
+
+register("qwen2-vl-7b", make)

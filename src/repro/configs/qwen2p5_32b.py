@@ -1,0 +1,23 @@
+"""Qwen2.5-32B — dense GQA kv=8, QKV bias [hf:Qwen/Qwen2.5-0.5B family card]."""
+from repro.configs.base import ModelConfig, register
+
+
+def make():
+    return ModelConfig(
+        name="qwen2.5-32b",
+        family="dense",
+        n_layers=64,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=27648,
+        vocab_size=152064,
+        qkv_bias=True,
+        rope_theta=1_000_000.0,
+        long_context_window=8192,
+        source="Qwen2.5 [hf:Qwen/Qwen2.5-0.5B]",
+    )
+
+
+register("qwen2.5-32b", make)

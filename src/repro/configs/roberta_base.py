@@ -1,0 +1,38 @@
+"""Paper's own model family: RoBERTa-class encoders + frozen classifier head
+(Liu et al. 2019; paper §5.1).  Used by the paper-faithful federated track.
+``roberta-sim`` is the CPU-scale variant the benchmarks actually train."""
+from repro.configs.base import ModelConfig, register
+
+
+def _encoder(name, n_layers, d_model, n_heads, d_ff, n_classes=77):
+    return ModelConfig(
+        name=name,
+        family="encoder",
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_heads,
+        d_ff=d_ff,
+        vocab_size=50265,
+        rope_mode="none",
+        is_encoder=True,
+        n_classes=n_classes,
+        dtype="float32",
+        lora_targets=("q", "k", "v", "o", "up", "down"),
+        source="RoBERTa (Liu et al., 2019)",
+    )
+
+
+register("roberta-base", lambda: _encoder("roberta-base", 12, 768, 12, 3072))
+register("roberta-large", lambda: _encoder("roberta-large", 24, 1024, 16, 4096))
+register("distilbert", lambda: _encoder("distilbert", 6, 768, 12, 3072))
+
+
+def make_sim(n_classes=20, vocab=512, seq=32):
+    """CPU-trainable stand-in with the same structure (see DESIGN.md §7)."""
+    import dataclasses
+    cfg = _encoder("roberta-sim", 2, 64, 4, 128, n_classes=n_classes)
+    return dataclasses.replace(cfg, vocab_size=vocab)
+
+
+register("roberta-sim", make_sim)

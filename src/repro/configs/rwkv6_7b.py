@@ -1,0 +1,22 @@
+"""RWKV-6 "Finch" 7B — attention-free, data-dependent decay [arXiv:2404.05892]."""
+from repro.configs.base import ModelConfig, register
+
+
+def make():
+    return ModelConfig(
+        name="rwkv6-7b",
+        family="ssm",
+        n_layers=32,
+        d_model=4096,
+        n_heads=64,          # 4096 / rwkv_head_dim(64)
+        n_kv_heads=64,
+        d_ff=14336,
+        vocab_size=65536,
+        rwkv_head_dim=64,
+        rope_mode="none",
+        lora_targets=("r", "k", "v", "g", "o", "ffn_k", "ffn_v"),
+        source="Finch: RWKV-6 [arXiv:2404.05892]",
+    )
+
+
+register("rwkv6-7b", make)

@@ -1,0 +1,28 @@
+"""Zamba2-2.7B — Mamba-2 backbone + shared attention block [arXiv:2411.15242].
+54 mamba2 layers with a weight-shared attention+MLP block every 6 layers."""
+from repro.configs.base import LayerSpec, ModelConfig, register
+
+
+def make():
+    return ModelConfig(
+        name="zamba2-2.7b",
+        family="hybrid",
+        n_layers=63,  # 54 mamba + 9 shared-attn invocations
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=32,
+        head_dim=80,
+        d_ff=10240,
+        vocab_size=32000,
+        ssm_state=64,
+        ssm_expand=2,
+        ssm_head_dim=64,
+        pattern=(LayerSpec("mamba2", count=6), LayerSpec("shared_attn", count=1)),
+        n_periods=9,
+        lora_targets=("q", "k", "v", "o", "gate", "up", "down",
+                      "ssm_in", "ssm_out"),
+        source="Zamba2 [arXiv:2411.15242]",
+    )
+
+
+register("zamba2-2.7b", make)

@@ -1,0 +1,80 @@
+"""Server-side aggregation strategies (paper §2/§3 baselines + LoRA-A²).
+
+All aggregators take per-client adapter *deltas* (client_final - global) and
+FedAvg weights w_k, and return the new global adapters.  The discordance
+problem (Eq. 2) is about what happens here: averaging 'a' and 'b' separately
+(FL+LoRA) does not average the products.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lora import iter_modules
+from repro.core.selection import _get
+from repro.utils import tree_add, tree_weighted_sum
+
+
+def fedavg(global_adapters, deltas, weights):
+    """FL + LoRA: per-matrix weighted average (suffers discordance)."""
+    avg = tree_weighted_sum(deltas, list(weights))
+    return tree_add(global_adapters, avg)
+
+
+def lora_a2(global_adapters, masked_deltas, weights):
+    """LoRA-A² (and FFA-LoRA when masks are full and parity fixed at 1):
+    weighted sum of masked active-half deltas.  Exact because the frozen
+    half is identical across clients (Eq. 3)."""
+    return tree_add(global_adapters, tree_weighted_sum(masked_deltas, list(weights)))
+
+
+def flexlora(global_adapters, client_adapters, weights, rank, lora_alpha_scale=1.0):
+    """FlexLoRA (Bai et al., 2024): aggregate the full products
+    ΔW = Σ w_k a_k b_k, then SVD back to rank-r factors.
+
+    Matches the paper's observed failure mode: SVD of a (d_in, d_out) matrix
+    per module per round — expensive and occasionally ill-conditioned (the
+    paper could not report RoBERTa-large numbers for this reason)."""
+    new = jax.tree.map(lambda x: x, global_adapters)
+    for path, _ in iter_modules(global_adapters):
+        prods = []
+        for ca in client_adapters:
+            ab = _get(ca, path)
+            prods.append(jnp.einsum("...ir,...ro->...io",
+                                    ab["a"].astype(jnp.float32),
+                                    ab["b"].astype(jnp.float32)))
+        w = jnp.asarray(list(weights), jnp.float32)
+        agg = sum(p * wk for p, wk in zip(prods, w))  # (..., d_in, d_out)
+        u, s, vt = jnp.linalg.svd(agg, full_matrices=False)
+        r = rank
+        sq = jnp.sqrt(s[..., :r])
+        a_new = u[..., :, :r] * sq[..., None, :]
+        b_new = vt[..., :r, :] * sq[..., :, None]
+        holder = _get(new, path)
+        holder["a"] = a_new.astype(holder["a"].dtype)
+        holder["b"] = b_new.astype(holder["b"].dtype)
+    return new
+
+
+def hetlora(global_adapters, deltas, weights, client_ranks, gamma=0.99):
+    """HetLoRA (Cho et al., 2023): clients train truncated-rank adapters;
+    zero-padding aligns them for aggregation (deltas outside a client's rank
+    are zero by construction here).  A sparsity-decay factor gamma shrinks
+    the tail ranks each round (self-pruning)."""
+    r_max = int(max(client_ranks))
+    agg = tree_weighted_sum(deltas, list(weights))
+    new = tree_add(global_adapters, agg)
+    out = jax.tree.map(lambda x: x, new)
+    for path, ab in iter_modules(new):
+        r = ab["a"].shape[-1]
+        decay = jnp.where(jnp.arange(r) < r_max, 1.0, gamma)
+        holder = _get(out, path)
+        holder["a"] = ab["a"] * decay           # (..., d_in, r) * (r,)
+        holder["b"] = ab["b"] * decay[..., :, None]
+    return out
+
+
+def fedavg_params(global_params, deltas, weights):
+    """Full fine-tuning FedAvg (the 'FL (w/o LoRA)' row)."""
+    return tree_add(global_params, tree_weighted_sum(deltas, list(weights)))

@@ -1,0 +1,30 @@
+"""Differential privacy for client uploads (paper §5.5, following Ryu et al.
+2022): L2 clipping + Laplace mechanism on the uploaded delta."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_count, tree_l2, tree_scale
+
+
+def clip_tree(tree, clip_norm):
+    norm = tree_l2(tree)
+    factor = jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))
+    return tree_scale(tree, factor)
+
+
+def add_laplace(tree, key, scale):
+    """i.i.d. Laplace(0, scale) noise on every leaf."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [l + jax.random.laplace(k, l.shape, jnp.float32).astype(l.dtype) * scale
+             for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, noisy)
+
+
+def privatize(tree, key, *, epsilon, clip_norm):
+    """Clip to L2<=C and add Laplace noise with b = C / epsilon (per-round
+    sensitivity C under replace-one adjacency)."""
+    clipped = clip_tree(tree, clip_norm)
+    return add_laplace(clipped, key, clip_norm / epsilon)

@@ -1,0 +1,364 @@
+"""Federated fine-tuning engine (paper §5 experimental machinery).
+
+Implements the full client/server loop for every method the paper compares:
+
+    fl_lora   — naive FedAvg on both LoRA halves (FL + LoRA)
+    ffa_lora  — B-only training forever (Sun et al., 2024)
+    flexlora  — product aggregation + server SVD (Bai et al., 2024)
+    hetlora   — zero-padded heterogeneous ranks + sparsity decay (Cho et al.)
+    lora_a2   — alternating freeze + adaptive rank selection (ours/paper)
+    full_ft   — FedAvg on all base params (the 'FL (w/o LoRA)' row)
+
+The engine is model-agnostic: it drives any ModelConfig whose loss is
+classifier_loss (encoder track) or lm_loss (decoder track).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import aggregate, dp, lora, selection
+from repro.models import model as M
+from repro.optim import adamw
+from repro.utils import tree_add, tree_sub, tree_scale
+
+
+@dataclasses.dataclass
+class FedConfig:
+    method: str = "lora_a2"
+    rank: int = 8                 # communication rank budget r_i
+    global_rank: int = 16         # adapter rank r_G (lora_a2); baselines use rank
+    rounds: int = 50
+    local_epochs: int = 5
+    probe_epochs: int = 1         # lora_a2: epochs used to estimate ΔW for scoring
+    batch_size: int = 32
+    lr: float = 5e-4
+    lr_b_mult: float = 5.0        # LoRA+ eta_B / eta_A (lora_a2)
+    weight_decay: float = 0.0
+    n_clients: int = 30
+    participation: float = 1.0
+    seed: int = 0
+    dp_epsilon: Optional[float] = None
+    dp_clip: float = 2.0
+    criterion: str = "ours"       # 'ours' | 'magnitude' | 'importance'
+    client_ranks: Optional[Sequence[int]] = None  # resource heterogeneity
+    alternating: bool = True      # False -> freeze 'a' forever (Fig. 6 ablation)
+    eval_every: int = 5
+    track_similarity: bool = False
+    hetlora_gamma: float = 0.99
+
+
+PARITY_A, PARITY_B, PARITY_BOTH = 0, 1, 2
+
+
+def adapter_rank(fed: FedConfig) -> int:
+    return fed.global_rank if fed.method == "lora_a2" else fed.rank
+
+
+def _loss_fn(cfg: ModelConfig, scale):
+    if cfg.is_encoder:
+        def f(adapters, params, batch):
+            params = jax.tree.map(jax.lax.stop_gradient, params)  # frozen base
+            return M.classifier_loss(cfg, params, adapters, batch, lora_scale=scale)
+    else:
+        def f(adapters, params, batch):
+            params = jax.tree.map(jax.lax.stop_gradient, params)
+            return M.lm_loss(cfg, params, adapters, batch, lora_scale=scale,
+                             remat=False)
+    return f
+
+
+def make_local_step(cfg: ModelConfig, fed: FedConfig, opt_cfg):
+    """jit-compiled one-batch local step shared by all clients."""
+    scale = lora.lora_scale(adapter_rank(fed))
+    loss_fn = _loss_fn(cfg, scale)
+
+    @jax.jit
+    def step(params, adapters, opt_state, batch, parity, rank_masks):
+        loss, grads = jax.value_and_grad(loss_fn)(adapters, params, batch)
+        upd_masks = selection.adapter_update_masks(adapters, rank_masks, parity)
+        lr_tree = adamw.lora_plus_lr_tree(adapters, fed.lr_b_mult)
+        new_adapters, new_opt = adamw.apply_update(
+            opt_cfg, adapters, grads, opt_state, lr_tree=lr_tree,
+            update_mask=upd_masks)
+        return new_adapters, new_opt, loss
+
+    return step
+
+
+def make_full_ft_step(cfg: ModelConfig, opt_cfg):
+    def loss_fn(params, batch):
+        if cfg.is_encoder:
+            return M.classifier_loss(cfg, params, None, batch)
+        return M.lm_loss(cfg, params, None, batch, remat=False)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt = adamw.apply_update(opt_cfg, params, grads, opt_state)
+        return new_params, new_opt, loss
+
+    return step
+
+
+def _batches(rng, n, batch_size):
+    idx = rng.permutation(n)
+    n_batches = max(1, -(-n // batch_size))
+    pad = n_batches * batch_size - n
+    if pad:
+        idx = np.concatenate([idx, idx[:pad]])
+    return idx.reshape(n_batches, batch_size)
+
+
+def _make_batch(cfg, ds, idx):
+    if cfg.is_encoder:
+        return {"tokens": jnp.asarray(ds.tokens[idx]),
+                "label": jnp.asarray(ds.labels[idx])}
+    return {"tokens": jnp.asarray(ds["tokens"][idx]),
+            "labels": jnp.asarray(ds["labels"][idx])}
+
+
+def make_eval(cfg: ModelConfig, scale):
+    @jax.jit
+    def eval_batch(params, adapters, tokens, labels):
+        logits = M.classify(cfg, params, adapters, tokens, lora_scale=scale)
+        return (jnp.argmax(logits, -1) == labels).sum()
+
+    def evaluate(params, adapters, test_ds, batch=256):
+        n = len(test_ds)
+        correct = 0
+        for s in range(0, n, batch):
+            idx = np.arange(s, min(s + batch, n))
+            if len(idx) < batch:  # remainder: eval unjitted (runs once)
+                logits = M.classify(cfg, params, adapters,
+                                    jnp.asarray(test_ds.tokens[idx]),
+                                    lora_scale=scale)
+                correct += int((jnp.argmax(logits, -1) ==
+                                jnp.asarray(test_ds.labels[idx])).sum())
+            else:
+                correct += int(eval_batch(params, adapters,
+                                          jnp.asarray(test_ds.tokens[idx]),
+                                          jnp.asarray(test_ds.labels[idx])))
+        return correct / n
+
+    return evaluate
+
+
+def run_federated(cfg: ModelConfig, fed: FedConfig, train_ds, test_ds,
+                  client_indices):
+    """Run the full federated fine-tuning session.  Returns a history dict."""
+    key = jax.random.PRNGKey(fed.seed)
+    kp, ka, kd = jax.random.split(key, 3)
+    params = M.init_params(cfg, kp)
+    rng = np.random.default_rng(fed.seed)
+
+    weights = np.array([len(i) for i in client_indices], np.float64)
+    weights = weights / weights.sum()
+    client_ds = [train_ds.subset(i) if hasattr(train_ds, "subset")
+                 else {k: v[i] for k, v in train_ds.items()}
+                 for i in client_indices]
+
+    history = {"round": [], "acc": [], "loss": [], "uploaded": [],
+               "uploaded_cum": 0.0, "mask_overlap": [], "update_cosine": []}
+
+    if fed.method == "full_ft":
+        return _run_full_ft(cfg, fed, params, client_ds, weights, test_ds, history, rng)
+
+    r_G = adapter_rank(fed)
+    adapters = lora.init_adapters(cfg, ka, r_G)
+    n_mod = lora.n_modules(cfg)
+    opt_cfg = adamw.AdamWConfig(lr=fed.lr, weight_decay=fed.weight_decay)
+    step = make_local_step(cfg, fed, opt_cfg)
+    evaluate = make_eval(cfg, lora.lora_scale(r_G)) if cfg.is_encoder else None
+    full_masks = selection.masks_like(adapters)
+    client_rank_list = (list(fed.client_ranks) if fed.client_ranks is not None
+                        else [fed.rank] * fed.n_clients)
+
+    for t in range(1, fed.rounds + 1):
+        if fed.method == "lora_a2":
+            parity = (t % 2) if fed.alternating else PARITY_B
+        elif fed.method == "ffa_lora":
+            parity = PARITY_B
+        else:
+            parity = PARITY_BOTH
+
+        participants = _sample_participants(rng, fed)
+        deltas, masked_deltas, client_finals = [], [], []
+        round_upload = 0.0
+        round_losses = []
+        round_masks = []
+
+        for k in participants:
+            local = adapters
+            opt_state = adamw.init_state(local)
+            ds_k = client_ds[k]
+            n_k = len(ds_k) if hasattr(ds_k, "__len__") else len(ds_k["labels"])
+
+            # --- rank selection (lora_a2): probe epoch -> scores -> masks ---
+            if fed.method == "lora_a2":
+                probe, probe_opt = local, opt_state
+                for _ in range(fed.probe_epochs):
+                    for bidx in _batches(rng, n_k, fed.batch_size):
+                        probe, probe_opt, _ = step(params, probe, probe_opt,
+                                                   _make_batch(cfg, ds_k, bidx),
+                                                   parity, full_masks)
+                probe_delta = tree_sub(probe, adapters)
+                scores = _score(fed, adapters, probe_delta, parity)
+                masks, _ = selection.select_topk(scores, client_rank_list[k], n_mod)
+                local, opt_state = adapters, adamw.init_state(adapters)
+            elif fed.method == "hetlora":
+                masks = selection.first_k_masks(adapters, client_rank_list[k])
+            else:
+                masks = full_masks
+            round_masks.append(masks)
+
+            # --- local training ---
+            for _ in range(fed.local_epochs):
+                for bidx in _batches(rng, n_k, fed.batch_size):
+                    local, opt_state, loss = step(params, local, opt_state,
+                                                  _make_batch(cfg, ds_k, bidx),
+                                                  parity, masks)
+                    round_losses.append(float(loss))
+
+            delta = tree_sub(local, adapters)
+            masked = selection.mask_delta(delta, masks, parity) \
+                if parity != PARITY_BOTH else delta
+
+            if fed.dp_epsilon is not None:
+                kd, kn = jax.random.split(kd)
+                masked = dp.privatize(masked, kn, epsilon=fed.dp_epsilon,
+                                      clip_norm=fed.dp_clip)
+                delta = masked
+
+            deltas.append(delta)
+            masked_deltas.append(masked)
+            client_finals.append(local)
+            round_upload += _upload_count(fed, adapters, masks, parity)
+
+        w = [weights[k] for k in participants]
+        w = [x / sum(w) for x in w]
+        if fed.method in ("fl_lora",):
+            adapters = aggregate.fedavg(adapters, deltas, w)
+        elif fed.method in ("ffa_lora", "lora_a2"):
+            adapters = aggregate.lora_a2(adapters, masked_deltas, w)
+        elif fed.method == "flexlora":
+            adapters = aggregate.flexlora(adapters, client_finals, w, r_G)
+        elif fed.method == "hetlora":
+            adapters = aggregate.hetlora(adapters, deltas, w,
+                                         client_rank_list, fed.hetlora_gamma)
+        else:
+            raise ValueError(fed.method)
+
+        history["uploaded_cum"] += round_upload
+        if t % fed.eval_every == 0 or t == fed.rounds:
+            acc = evaluate(params, adapters, test_ds) if evaluate else float("nan")
+            history["round"].append(t)
+            history["acc"].append(acc)
+            history["loss"].append(float(np.mean(round_losses)))
+            history["uploaded"].append(history["uploaded_cum"])
+            if fed.track_similarity:
+                history["mask_overlap"].append(_mask_overlap(round_masks))
+                history["update_cosine"].append(_update_cosine(deltas, adapters, parity))
+
+    history["adapters"] = adapters
+    history["params"] = params
+    return history
+
+
+def _run_full_ft(cfg, fed, params, client_ds, weights, test_ds, history, rng):
+    opt_cfg = adamw.AdamWConfig(lr=fed.lr)
+    step = make_full_ft_step(cfg, opt_cfg)
+    evaluate = make_eval(cfg, 1.0) if cfg.is_encoder else None
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    for t in range(1, fed.rounds + 1):
+        participants = _sample_participants(rng, fed)
+        deltas, losses = [], []
+        for k in participants:
+            local, opt_state = params, adamw.init_state(params)
+            ds_k = client_ds[k]
+            n_k = len(ds_k) if hasattr(ds_k, "__len__") else len(ds_k["labels"])
+            for _ in range(fed.local_epochs):
+                for bidx in _batches(rng, n_k, fed.batch_size):
+                    local, opt_state, loss = step(local, opt_state,
+                                                  _make_batch(cfg, ds_k, bidx))
+                    losses.append(float(loss))
+            deltas.append(tree_sub(local, params))
+        w = [weights[k] for k in participants]
+        w = [x / sum(w) for x in w]
+        params = aggregate.fedavg_params(params, deltas, w)
+        history["uploaded_cum"] += n_params * len(participants)
+        if t % fed.eval_every == 0 or t == fed.rounds:
+            acc = evaluate(params, None, test_ds) if evaluate else float("nan")
+            history["round"].append(t)
+            history["acc"].append(acc)
+            history["loss"].append(float(np.mean(losses)))
+            history["uploaded"].append(history["uploaded_cum"])
+    history["params"] = params
+    return history
+
+
+def _sample_participants(rng, fed):
+    if fed.participation >= 1.0:
+        return list(range(fed.n_clients))
+    m = max(1, int(round(fed.participation * fed.n_clients)))
+    return sorted(rng.choice(fed.n_clients, size=m, replace=False).tolist())
+
+
+def _score(fed, adapters, probe_delta, parity):
+    if fed.criterion == "ours":
+        return selection.importance_scores(adapters, probe_delta, parity)
+    if fed.criterion == "magnitude":
+        return selection.magnitude_scores(adapters, probe_delta, parity)
+    if fed.criterion == "importance":
+        return selection.sensitivity_scores(adapters, probe_delta, parity)
+    raise ValueError(fed.criterion)
+
+
+def _upload_count(fed, adapters, masks, parity):
+    if parity == PARITY_BOTH:
+        return sum(x.size for x in jax.tree.leaves(adapters))
+    return selection.selected_upload_count(masks, adapters, parity)
+
+
+def _mask_overlap(round_masks):
+    """Pairwise Jaccard overlap of clients' selected rank sets (Fig. 5a)."""
+    flats = [np.concatenate([np.asarray(m).reshape(-1) for m in
+                             dict(sorted(rm.items())).values()])
+             for rm in round_masks]
+    K = len(flats)
+    out = np.zeros((K, K))
+    for i in range(K):
+        for j in range(K):
+            inter = float(np.minimum(flats[i], flats[j]).sum())
+            union = float(np.maximum(flats[i], flats[j]).sum())
+            out[i, j] = inter / union if union else 0.0
+    return out
+
+
+def _update_cosine(deltas, adapters, parity):
+    """Pairwise cosine similarity of clients' ΔW updates (Fig. 5b/10)."""
+    vecs = []
+    for d in deltas:
+        parts = []
+        for path, ab in lora.iter_modules(d):
+            base = selection._get(adapters, path)
+            if parity == PARITY_B or parity == PARITY_BOTH:
+                dw = jnp.einsum("...ir,...ro->...io", base["a"], ab["b"])
+                parts.append(np.asarray(dw, np.float64).reshape(-1))
+            if parity == PARITY_A or parity == PARITY_BOTH:
+                dw = jnp.einsum("...ir,...ro->...io", ab["a"], base["b"])
+                parts.append(np.asarray(dw, np.float64).reshape(-1))
+        vecs.append(np.concatenate(parts))
+    K = len(vecs)
+    out = np.zeros((K, K))
+    for i in range(K):
+        for j in range(K):
+            n = np.linalg.norm(vecs[i]) * np.linalg.norm(vecs[j])
+            out[i, j] = float(vecs[i] @ vecs[j] / n) if n else 0.0
+    return out

@@ -1,0 +1,156 @@
+"""LoRA adapters: specs, init, masking, flattening, merging, counting.
+
+Adapter pytree mirrors the model's block layout (see models/model.py):
+
+    adapters = {
+      'blocks': {'<pos>': {'<target>': {'a': (P, d_in, r), 'b': (P, r, d_out)}}},
+      'shared': {'<pos>': {'<target>': {'a': (d_in, r),    'b': (r, d_out)}}},
+    }
+
+with P = cfg.n_periods (period-stacked, sliced by the layer scan).  'a' is the
+paper's input-side A (trained on even rounds), 'b' the paper's output-side B
+(trained on odd rounds, zero-init so ΔW starts at 0).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import expanded_positions
+
+LORA_ALPHA = 16.0
+
+
+def lora_scale(rank: int, alpha: float = LORA_ALPHA) -> float:
+    """Paper Appendix B: adapters merge as W0 + (16/r) ΔW."""
+    return alpha / rank
+
+
+def target_dims(cfg: ModelConfig, kind: str):
+    """{target_name: (d_in, d_out)} for one block kind (before filtering by
+    cfg.lora_targets)."""
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.head_dim
+    if kind in ("attn", "shared_attn", "moe"):
+        dims = {
+            "q": (d, cfg.n_heads * hd),
+            "k": (d, cfg.n_kv_heads * hd),
+            "v": (d, cfg.n_kv_heads * hd),
+            "o": (cfg.n_heads * hd, d),
+        }
+        if kind == "moe":
+            dims["router"] = (d, cfg.n_experts)
+        else:
+            dims.update({"gate": (d, f), "up": (d, f), "down": (f, d)})
+        return dims
+    if kind == "rwkv6":
+        return {
+            "r": (d, d), "k": (d, d), "v": (d, d), "g": (d, d), "o": (d, d),
+            "ffn_k": (d, f), "ffn_v": (f, d),
+        }
+    if kind == "mamba2":
+        d_inner = cfg.ssm_expand * d
+        h = d_inner // cfg.ssm_head_dim
+        d_in_proj = 2 * d_inner + 2 * cfg.ssm_state + h
+        return {"ssm_in": (d, d_in_proj), "ssm_out": (d_inner, d)}
+    raise ValueError(kind)
+
+
+def lora_spec(cfg: ModelConfig):
+    """{('blocks'|'shared', pos, target): (d_in, d_out)} for every adapter."""
+    spec = {}
+    for i, s in expanded_positions(cfg):
+        group = "shared" if s.kind == "shared_attn" else "blocks"
+        for name, dims in target_dims(cfg, s.kind).items():
+            if name in cfg.lora_targets:
+                spec[(group, str(i), name)] = dims
+    return spec
+
+
+def init_adapters(cfg: ModelConfig, key, rank: int, dtype=jnp.float32):
+    """A ~ N(0, 1/d_in); B = 0 (standard LoRA init, ΔW = 0 at round 0)."""
+    spec = lora_spec(cfg)
+    adapters = {"blocks": {}, "shared": {}}
+    keys = jax.random.split(key, max(len(spec), 1))
+    for ((group, pos, name), (d_in, d_out)), k in zip(sorted(spec.items()), keys):
+        if group == "blocks":
+            a = (jax.random.normal(k, (cfg.n_periods, d_in, rank)) *
+                 (d_in ** -0.5)).astype(dtype)
+            b = jnp.zeros((cfg.n_periods, rank, d_out), dtype)
+        else:
+            a = (jax.random.normal(k, (d_in, rank)) * (d_in ** -0.5)).astype(dtype)
+            b = jnp.zeros((rank, d_out), dtype)
+        adapters.setdefault(group, {}).setdefault(pos, {})[name] = {"a": a, "b": b}
+    if not adapters["shared"]:
+        del adapters["shared"]
+    return adapters
+
+
+# ---------------------------------------------------------------------------
+# Flat module view — the federated algorithms iterate over "modules" (paper
+# notation: module m).  A module here is one (group, pos, target, period)
+# LoRA adapter; flattening unrolls the period stacking.
+# ---------------------------------------------------------------------------
+
+
+def iter_modules(adapters):
+    """Yield (path_tuple, {'a','b'}) for every adapter matrix pair, where
+    path = (group, pos, target).  Period-stacked adapters stay stacked — the
+    scoring/masking code is written to broadcast over the leading period dim."""
+    for group in sorted(adapters):
+        for pos in sorted(adapters[group], key=int):
+            for target in sorted(adapters[group][pos]):
+                yield (group, pos, target), adapters[group][pos][target]
+
+
+def n_modules(cfg: ModelConfig):
+    """Paper's N: number of LoRA target modules across all layers."""
+    total = 0
+    for i, s in expanded_positions(cfg):
+        k = len([n for n in target_dims(cfg, s.kind) if n in cfg.lora_targets])
+        if s.kind == "shared_attn":
+            total += k
+        else:
+            total += k * cfg.n_periods
+    return total
+
+
+def uploaded_params(cfg: ModelConfig, rank: int) -> int:
+    """Parameters uploaded per client per round at rank r (one half of each
+    adapter: alternating freeze uploads only B or only A)."""
+    total = 0
+    for (group, pos, name), (d_in, d_out) in lora_spec(cfg).items():
+        mult = 1 if group == "shared" else cfg.n_periods
+        total += mult * rank * max(d_in, d_out)  # upper bound: the bigger half
+    return total
+
+
+def adapter_param_count(cfg: ModelConfig, rank: int) -> int:
+    total = 0
+    for (group, pos, name), (d_in, d_out) in lora_spec(cfg).items():
+        mult = 1 if group == "shared" else cfg.n_periods
+        total += mult * rank * (d_in + d_out)
+    return total
+
+
+def merge_adapters(cfg, params, adapters, rank):
+    """W_ft = W0 + (alpha/r) B A — materialize merged weights (eval util)."""
+    import copy
+    scale = lora_scale(rank)
+    merged = jax.tree.map(lambda x: x, params)  # shallow functional copy
+    for (group, pos, target), ab in iter_modules(adapters):
+        base_block = merged["shared" if group == "shared" else "blocks"][pos]
+        w_holder = _find_weight_holder(base_block, target)
+        delta = jnp.einsum("...ir,...ro->...io", ab["a"], ab["b"]) * scale
+        w_holder["w"] = w_holder["w"] + delta.astype(w_holder["w"].dtype)
+    return merged
+
+
+def _find_weight_holder(block, target):
+    """Locate the param dict holding the weight for a LoRA target name."""
+    for sub in ("attn", "mlp", "moe"):
+        if isinstance(block, dict) and sub in block and target in block[sub]:
+            return block[sub][target]
+    if target in block:
+        return block[target]
+    raise KeyError(target)

@@ -1,0 +1,172 @@
+"""Adaptive rank selection (paper §4.2).
+
+Importance criterion, Eq. 4: for rank i of module m,
+
+    S_i^{B_k} = ||ΔB_k[:,i] A[i,:]||_F      (odd rounds, B trained)
+    S_i^{A_k} = ||B[:,i] ΔA_k[i,:]||_F      (even rounds, A trained)
+
+Each contribution is a rank-1 outer product, so ||u v^T||_F = ||u||_2 ||v||_2
+— we compute the exact criterion in O(r (d1+d2)) without materializing the
+d1 x d2 product (DESIGN.md §4).  In our (in,out) convention the paper's A is
+adapter 'a' (d_in, r) and the paper's B is adapter 'b' (r, d_out); rank i is
+column a[:, i] and row b[i, :].
+
+Selection is global: top-(budget * N) scores across every (module, period,
+rank) slot in the whole model (paper: top r_i*N of r_G*N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import iter_modules
+
+
+def importance_scores(adapters, delta, parity):
+    """{path: scores} with scores shaped (..., r) (period-stacked when the
+    module is; the leading dims broadcast through).
+
+    parity 1 (odd, B='b' trained): S = ||a[:,i]|| * ||Δb[i,:]||
+    parity 0 (even, A='a' trained): S = ||Δa[:,i]|| * ||b[i,:]||
+    """
+    scores = {}
+    for path, ab in iter_modules(adapters):
+        d = _get(delta, path)
+        if parity == 1:
+            u = jnp.linalg.norm(ab["a"].astype(jnp.float32), axis=-2)   # (..., r)
+            v = jnp.linalg.norm(d["b"].astype(jnp.float32), axis=-1)    # (..., r)
+        else:
+            u = jnp.linalg.norm(d["a"].astype(jnp.float32), axis=-2)
+            v = jnp.linalg.norm(ab["b"].astype(jnp.float32), axis=-1)
+        scores[path] = u * v
+    return scores
+
+
+def magnitude_scores(adapters, delta, parity):
+    """Ablation baseline (Table 9): ||Δ half[:, i]|| only."""
+    scores = {}
+    for path, _ in iter_modules(adapters):
+        d = _get(delta, path)
+        if parity == 1:
+            scores[path] = jnp.linalg.norm(d["b"].astype(jnp.float32), axis=-1)
+        else:
+            scores[path] = jnp.linalg.norm(d["a"].astype(jnp.float32), axis=-2)
+    return scores
+
+
+def sensitivity_scores(adapters, grads, parity):
+    """AdaLoRA-style |param * grad| importance (Table 9 'Importance')."""
+    scores = {}
+    for path, ab in iter_modules(adapters):
+        g = _get(grads, path)
+        if parity == 1:
+            s = jnp.abs(ab["b"].astype(jnp.float32) * g["b"].astype(jnp.float32))
+            scores[path] = s.sum(axis=-1)
+        else:
+            s = jnp.abs(ab["a"].astype(jnp.float32) * g["a"].astype(jnp.float32))
+            scores[path] = s.sum(axis=-2)
+    return scores
+
+
+def select_topk(scores, budget_ranks, n_modules):
+    """Global top-(budget_ranks * n_modules) over all score entries.
+
+    Returns ({path: 0/1 mask of scores' shape}, threshold).  Exactly-zero
+    scores are never selected even when the k-th score is 0 (early rounds
+    have many untouched ranks whose criterion is identically zero — without
+    this guard a zero threshold would select *every* rank and blow the
+    communication budget).
+    """
+    flat = jnp.concatenate([s.reshape(-1) for s in scores.values()])
+    k = min(int(budget_ranks * n_modules), flat.size)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    masks = {p: ((s >= thresh) & (s > 0)).astype(jnp.float32)
+             for p, s in scores.items()}
+    return masks, thresh
+
+
+def masks_like(adapters, value=1.0):
+    """Full (or empty) rank mask tree matching iter_modules(adapters)."""
+    out = {}
+    for path, ab in iter_modules(adapters):
+        r = ab["a"].shape[-1]
+        lead = ab["a"].shape[:-2]
+        out[path] = jnp.full(lead + (r,), value, jnp.float32)
+    return out
+
+
+def first_k_masks(adapters, k):
+    """HetLoRA-style static mask: ranks [0, k) active."""
+    out = {}
+    for path, ab in iter_modules(adapters):
+        r = ab["a"].shape[-1]
+        lead = ab["a"].shape[:-2]
+        m = (jnp.arange(r) < k).astype(jnp.float32)
+        out[path] = jnp.broadcast_to(m, lead + (r,))
+    return out
+
+
+def adapter_update_masks(adapters, rank_masks, parity):
+    """{path: {'a','b'}} multiplicative update masks from rank masks + the
+    alternating-freeze parity.  parity may be traced: 0 train-a, 1 train-b,
+    2 train-both (baselines)."""
+    a_on = jnp.logical_or(parity == 0, parity == 2).astype(jnp.float32)
+    b_on = jnp.logical_or(parity == 1, parity == 2).astype(jnp.float32)
+    out = jax.tree.map(lambda x: x, adapters)
+    for path, ab in iter_modules(adapters):
+        m = rank_masks[path]
+        holder = _get(out, path)
+        holder["a"] = jnp.broadcast_to(m[..., None, :] * a_on, ab["a"].shape)
+        holder["b"] = jnp.broadcast_to(m[..., :, None] * b_on, ab["b"].shape)
+    return out
+
+
+def apply_rank_mask_to_grads(grads, masks, parity):
+    """Eq. 6: Hadamard-mask the active half's gradient by the rank mask.
+    The frozen half's gradient is zeroed entirely (alternating freeze)."""
+    out = jax.tree.map(lambda x: x, grads)
+    for path, g in iter_modules(grads):
+        m = masks[path]
+        holder = _get(out, path)
+        if parity == 1:
+            holder["b"] = g["b"] * m[..., :, None]
+            holder["a"] = jnp.zeros_like(g["a"])
+        else:
+            holder["a"] = g["a"] * m[..., None, :]
+            holder["b"] = jnp.zeros_like(g["b"])
+    return out
+
+
+def mask_delta(delta, masks, parity):
+    """What the client uploads: the active half's delta, rank-masked; the
+    frozen half's delta is exactly zero by construction."""
+    out = jax.tree.map(jnp.zeros_like, delta)
+    for path, d in iter_modules(delta):
+        m = masks[path]
+        holder = _get(out, path)
+        if parity == 1:
+            holder["b"] = d["b"] * m[..., :, None].astype(d["b"].dtype)
+        else:
+            holder["a"] = d["a"] * m[..., None, :].astype(d["a"].dtype)
+    return out
+
+
+def selected_upload_count(masks, adapters, parity):
+    """Exact number of parameters uploaded: per selected rank, the active
+    half's row/column."""
+    total = 0.0
+    for path, ab in iter_modules(adapters):
+        m = masks[path]
+        if parity == 1:
+            per_rank = ab["b"].shape[-1]  # d_out
+        else:
+            per_rank = ab["a"].shape[-2]  # d_in
+        total += float(m.sum()) * per_rank
+    return total
+
+
+def _get(tree, path):
+    node = tree
+    for p in path:
+        node = node[p]
+    return node

@@ -1,0 +1,70 @@
+"""Federated data partitioners: Dirichlet (Hsu et al. 2019), pathological
+(paper App. C), and resource-heterogeneity rank budgets (paper Fig. 9)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def dirichlet_partition(seed, labels, n_clients, alpha, min_size=1):
+    """Per-class Dirichlet split: for each class, proportions over clients
+    ~ Dir(alpha).  Returns list of index arrays (one per client)."""
+    rng = np.random.default_rng(seed)
+    labels = np.asarray(labels)
+    n_classes = int(labels.max()) + 1
+    client_idx = [[] for _ in range(n_clients)]
+    for c in range(n_classes):
+        idx = np.flatnonzero(labels == c)
+        rng.shuffle(idx)
+        props = rng.dirichlet(np.full(n_clients, alpha))
+        cuts = (np.cumsum(props)[:-1] * len(idx)).astype(int)
+        for k, part in enumerate(np.split(idx, cuts)):
+            client_idx[k].append(part)
+    out = [np.concatenate(parts) if parts else np.empty(0, int)
+           for parts in client_idx]
+    # guarantee every client has at least min_size samples (paper's stats
+    # show min |D_k| = 1 at Dir(0.01))
+    donor = int(np.argmax([len(o) for o in out]))
+    for k in range(n_clients):
+        while len(out[k]) < min_size:
+            out[k] = np.append(out[k], out[donor][-1])
+            out[donor] = out[donor][:-1]
+    for o in out:
+        rng.shuffle(o)
+    return out
+
+
+def pathological_partition(labels, n_clients):
+    """Paper App. C: client (2k-1) and (2k) each hold half of classes
+    (2k-1) and (2k) — consecutive pairs share the same two classes."""
+    labels = np.asarray(labels)
+    assert n_clients % 2 == 0
+    out = []
+    for pair in range(n_clients // 2):
+        c0, c1 = 2 * pair, 2 * pair + 1
+        i0 = np.flatnonzero(labels == c0)
+        i1 = np.flatnonzero(labels == c1)
+        h0, h1 = len(i0) // 2, len(i1) // 2
+        out.append(np.concatenate([i0[:h0], i1[:h1]]))
+        out.append(np.concatenate([i0[h0:], i1[h1:]]))
+    return out
+
+
+def resource_rank_budgets(seed, n_clients, kind, r_max=8):
+    """Per-client communication rank budgets r_i (paper Fig. 9)."""
+    rng = np.random.default_rng(seed)
+    choices = np.array([1, 2, 4, r_max])
+    if kind == "uniform":
+        p = np.ones(4) / 4
+    elif kind == "heavy_tail":
+        p = np.array([0.55, 0.25, 0.15, 0.05])
+    elif kind == "normal":
+        p = np.array([0.15, 0.35, 0.35, 0.15])
+    else:
+        raise ValueError(kind)
+    return rng.choice(choices, size=n_clients, p=p).astype(int)
+
+
+def client_weights(client_indices):
+    """FedAvg weights w_k = |D_k| / sum |D_j| (paper Algorithm 1)."""
+    sizes = np.array([len(i) for i in client_indices], np.float64)
+    return sizes / sizes.sum()

@@ -1,0 +1,100 @@
+"""GQA flash-decode Pallas TPU kernel: one query token per sequence against a
+KV cache, online softmax over cache blocks.
+
+Grid: (B, Hkv, S/bs) with the cache-block axis innermost (sequential).  Each
+program holds the (G, D) query group for one kv head in VMEM along with
+running (m, l, acc) statistics; the normalized output is written at the last
+block.  Invalid slots (beyond ``pos`` or outside the sliding window) are
+masked with the same slot->position logic as the pure-JAX path, so the kernel
+is drop-in for both linear and ring-buffer caches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            block_s, window, ring, cache_len, scale):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    q = q_ref[0, 0]         # (G, D)
+    k = k_ref[0, :, 0]      # (bs, D)
+    v = v_ref[0, :, 0]      # (bs, D)
+
+    idx = s * block_s + jax.lax.broadcasted_iota(jnp.int32, (block_s,), 0)
+    if ring:
+        k_pos = pos - jnp.mod(pos - idx, cache_len)
+    else:
+        k_pos = idx
+    valid = (k_pos <= pos) & (k_pos >= 0)
+    if window is not None:
+        valid &= k_pos > (pos - window)
+
+    sc = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, bs)
+    sc = jnp.where(valid[None, :], sc, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, sc.max(axis=1, keepdims=True))
+    p = jnp.exp(sc - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=None, ring=False,
+                     block_s=512, interpret=True):
+    """q: (B, Hq, D); k/v_cache: (B, S, Hkv, D); pos: () int32.
+
+    Returns (B, Hq, D).  S must be divisible by block_s (ops.py pads)."""
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    scale = D ** -0.5
+    qg = q.reshape(B, Hkv, G, D)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_s=bs, window=window, ring=ring,
+                          cache_len=S, scale=scale),
+        grid=(B, Hkv, S // bs),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                      # pos
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),   # q
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, s: (b, s, h, 0)),  # k
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, s: (b, s, h, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # running max
+            pltpu.VMEM((G, 1), jnp.float32),   # running sum
+            pltpu.VMEM((G, D), jnp.float32),   # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos_arr, qg, k_cache, v_cache)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,77 @@
+"""Fused LoRA matmul Pallas TPU kernel:  y = x @ W + s * (x @ A) @ B.
+
+The paper's clients spend their compute in adapter-augmented matmuls; HF PEFT
+executes base and adapter as separate matmuls with two extra HBM round trips
+for the (x@A) intermediate.  This kernel fuses them: the (bm, r) low-rank
+partial product lives in a VMEM scratch accumulator across the K loop and the
+rank-r correction is applied in-register at the final K step, so the adapter
+adds zero extra HBM traffic for activations.
+
+Grid: (M/bm, N/bn, K/bk), K innermost (sequential accumulation).  Tile sizes
+are MXU-aligned multiples of 128 by default; rank r is zero-padded to the
+lane width by the ops.py wrapper when needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, xa_ref, *, scale,
+            out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jax.lax.dot(x, w_ref[...],
+                                preferred_element_type=jnp.float32)
+    xa_ref[...] += jax.lax.dot(x, a_ref[...],
+                               preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _finish():
+        lora = jax.lax.dot(xa_ref[...].astype(b_ref.dtype), b_ref[...],
+                           preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] + scale * lora).astype(out_dtype)
+
+
+def lora_matmul(x, w, a, b, *, scale=1.0, block_m=256, block_n=256,
+                block_k=512, interpret=True):
+    """x: (M, K); w: (K, N); a: (K, r); b: (r, N) -> (M, N).
+
+    M, N, K must be divisible by the block sizes (ops.py pads).
+    """
+    M, K = x.shape
+    _, N = w.shape
+    r = a.shape[1]
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (x.shape, w.shape, bm, bn, bk)
+
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, out_dtype=x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),   # x
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),   # w
+            pl.BlockSpec((bk, r), lambda m, n, k: (k, 0)),    # a
+            pl.BlockSpec((r, bn), lambda m, n, k: (0, n)),    # b
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),  # base accumulator
+            pltpu.VMEM((bm, r), jnp.float32),   # low-rank partial (x @ A)
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w, a, b)

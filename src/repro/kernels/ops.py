@@ -1,0 +1,97 @@
+"""jit'd public wrappers for the Pallas kernels: padding to tile-aligned
+shapes, dtype handling, and the interpret/compile switch.
+
+On this CPU-only container kernels always run in interpret mode (the kernel
+body executes as jax ops); on a real TPU host set ``interpret=False`` (or
+env REPRO_PALLAS_COMPILE=1) to compile them.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import lora_matmul as _lm
+from repro.kernels import rank_importance as _ri
+from repro.utils import round_up
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def _pad_axis(x, size, axis):
+    if x.shape[axis] == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, size - x.shape[axis])
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_m", "block_n",
+                                             "block_k"))
+def lora_matmul(x, w, a, b, *, scale=1.0, block_m=256, block_n=256,
+                block_k=512):
+    """y = x @ w + scale * (x @ a) @ b with padding to MXU-aligned tiles.
+
+    x: (..., K); w: (K, N); a: (K, r); b: (r, N)."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[1]
+    r = a.shape[1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    bm = min(block_m, round_up(M, 8))
+    bn = min(block_n, round_up(N, 128))
+    bk = min(block_k, round_up(K, 128))
+    Mp, Np, Kp = round_up(M, bm), round_up(N, bn), round_up(K, bk)
+    rp = round_up(r, 8)
+    xp = _pad_axis(_pad_axis(x2, Mp, 0), Kp, 1)
+    wp = _pad_axis(_pad_axis(w, Kp, 0), Np, 1)
+    ap = _pad_axis(_pad_axis(a, Kp, 0), rp, 1)
+    bp = _pad_axis(_pad_axis(b, rp, 0), Np, 1)
+    y = _lm.lora_matmul(xp, wp, ap, bp, scale=scale, block_m=bm, block_n=bn,
+                        block_k=bk, interpret=INTERPRET)
+    return y[:M, :N].reshape(lead + (N,))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "ring", "block_s"))
+def decode_attention(q, k_cache, v_cache, pos, *, window=None, ring=False,
+                     block_s=512):
+    """q: (B, Hq, D) or (B, 1, Hq, D); caches: (B, S, Hkv, D)."""
+    squeeze = q.ndim == 4
+    if squeeze:
+        q = q[:, 0]
+    S = k_cache.shape[1]
+    bs = min(block_s, S)
+    Sp = round_up(S, bs)
+    if Sp != S:
+        # pad with slots mapped to invalid positions (idx > pos always
+        # masked because k_pos >= S implies k_pos > pos in linear mode;
+        # ring mode requires aligned caches upstream)
+        assert not ring, "ring caches must be block-aligned"
+        k_cache = _pad_axis(k_cache, Sp, 1)
+        v_cache = _pad_axis(v_cache, Sp, 1)
+    out = _da.decode_attention(q, k_cache, v_cache, pos, window=window,
+                               ring=ring, block_s=bs, interpret=INTERPRET)
+    return out[:, None] if squeeze else out
+
+
+@jax.jit
+def rank_importance(a, db, *, block_k=1024):
+    """a: (..., d_in, r); db: (..., r, d_out) -> (..., r).
+
+    Zero-pads the reduction dims (zeros don't change sums of squares)."""
+    def one(aa, bb):
+        d_in, r = aa.shape
+        d_out = bb.shape[1]
+        bka = min(block_k, round_up(d_in, 128))
+        bkb = min(block_k, round_up(d_out, 128))
+        aa = _pad_axis(aa, round_up(d_in, bka), 0)
+        bb = _pad_axis(bb, round_up(d_out, bkb), 1)
+        return _ri.rank_importance(aa, bb, block_k=block_k, interpret=INTERPRET)
+
+    if a.ndim == 2:
+        return one(a, db)
+    return jax.vmap(one)(a, db)

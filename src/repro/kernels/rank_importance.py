@@ -1,0 +1,80 @@
+"""Rank-importance Pallas TPU kernel (paper Eq. 4 via the rank-1 identity):
+
+    S_i = ||a[:, i]||_2 * ||db[i, :]||_2
+
+Computes both column norms of A (d_in, r) and row norms of ΔB (r, d_out) in
+one kernel, blocking over the reduction dims so arbitrarily large d_in/d_out
+stream through VMEM while the (r,)-sized accumulators stay resident.
+
+Grid: (max(d_in/bk, d_out/bk),) — sequential; each step accumulates partial
+sum-of-squares from whichever operand still has blocks left.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.utils import cdiv
+
+
+def _kernel(a_ref, b_ref, o_ref, sa_ref, sb_ref, *, na, nb):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sa_ref[...] = jnp.zeros_like(sa_ref)
+        sb_ref[...] = jnp.zeros_like(sb_ref)
+
+    @pl.when(i < na)
+    def _acc_a():
+        blk = a_ref[...].astype(jnp.float32)      # (bk, r)
+        sa_ref[...] += jnp.sum(blk * blk, axis=0, keepdims=True)
+
+    @pl.when(i < nb)
+    def _acc_b():
+        blk = b_ref[...].astype(jnp.float32)      # (r, bk)
+        sb_ref[...] += jnp.sum(blk * blk, axis=1, keepdims=True).T
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _finish():
+        o_ref[...] = jnp.sqrt(sa_ref[...]) * jnp.sqrt(sb_ref[...])
+
+
+def rank_importance(a, db, *, block_k=1024, interpret=True):
+    """a: (d_in, r); db: (r, d_out) -> (r,) importance scores."""
+    d_in, r = a.shape
+    _, d_out = db.shape
+    bka = min(block_k, d_in)
+    bkb = min(block_k, d_out)
+    assert d_in % bka == 0 and d_out % bkb == 0
+    na, nb = d_in // bka, d_out // bkb
+    grid = (max(na, nb),)
+
+    def a_index(i):
+        return (jnp.minimum(i, na - 1), 0)
+
+    def b_index(i):
+        return (0, jnp.minimum(i, nb - 1))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, na=na, nb=nb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bka, r), a_index),
+            pl.BlockSpec((r, bkb), b_index),
+        ],
+        out_specs=pl.BlockSpec((1, r), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, r), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1, r), jnp.float32),
+            pltpu.VMEM((1, r), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(a, db)
+    return out[0]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth the
+shape/dtype sweeps assert against)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, w, a, b, *, scale=1.0):
+    base = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    low = jnp.dot(jnp.dot(x.astype(jnp.float32), a.astype(jnp.float32)),
+                  b.astype(jnp.float32))
+    return (base + scale * low).astype(x.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, *, window=None, ring=False):
+    """q: (B, Hq, D); caches: (B, S, Hkv, D); -> (B, Hq, D)."""
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    idx = jnp.arange(S)
+    if ring:
+        k_pos = pos - jnp.mod(pos - idx, S)
+    else:
+        k_pos = idx
+    valid = (k_pos <= pos) & (k_pos >= 0)
+    if window is not None:
+        valid &= k_pos > (pos - window)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * (D ** -0.5)
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    w = jnp.exp(s - s.max(-1, keepdims=True))
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def rank_importance_ref(a, db):
+    u = jnp.linalg.norm(a.astype(jnp.float32), axis=0)
+    v = jnp.linalg.norm(db.astype(jnp.float32), axis=1)
+    return u * v

@@ -1,0 +1,296 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, record memory/cost/collective analysis.
+
+The two lines above MUST stay first (before any other import): jax locks the
+device count at first initialization, and the dry-run needs 512 placeholder
+host devices so ``make_production_mesh`` can build the 16x16 and 2x16x16
+meshes.  Do not set this flag anywhere global — smoke tests see 1 device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step
+
+ARCHS = [
+    "rwkv6-7b", "qwen2-7b", "dbrx-132b", "kimi-k2-1t-a32b", "gemma3-12b",
+    "musicgen-medium", "zamba2-2.7b", "llama3-8b", "qwen2.5-32b", "qwen2-vl-7b",
+]
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype, dims):
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text):
+    """Per-device collective bytes by op kind, from the partitioned HLO.
+
+    Methodology (documented in EXPERIMENTS.md §Roofline): for each collective
+    instruction we count the RESULT shape's bytes — for all-reduce that equals
+    the operand size; for all-gather it is the bytes landing on each device;
+    for reduce-scatter/all-to-all/collective-permute it is the per-device
+    output.  Tuples (variadic collectives) sum their element shapes.
+    """
+    per_op = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.match(r"(?:%?[\w.\-]+ = )(.*?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(?:-start|-done)?\(", stripped)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        if "-done(" in stripped:
+            continue  # counted at -start
+        total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(result_type))
+        per_op[op] += total
+        counts[op] += 1
+    return {"bytes_by_op": per_op, "counts": counts,
+            "total_bytes": sum(per_op.values())}
+
+
+def _lower_compile(cfg, shape, mesh, *, multi_pod, adapter_rank, local_steps,
+                   build_kwargs=None):
+    bundle = build_step(cfg, shape, mesh, multi_pod=multi_pod,
+                        local_steps=local_steps, adapter_rank=adapter_rank,
+                        **(build_kwargs or {}))
+    jitted = jax.jit(bundle.step_fn, in_shardings=bundle.in_shardings,
+                     out_shardings=bundle.out_shardings,
+                     donate_argnums=bundle.donate_argnums)
+    with mesh:
+        lowered = jitted.lower(*bundle.args)
+        compiled = lowered.compile()
+    return bundle, compiled
+
+
+def _analysis(compiled):
+    cost = compiled.cost_analysis()
+    return {
+        "memory": _mem_dict(compiled.memory_analysis()),
+        "cost": _cost_dict(cost),
+        "collectives": parse_collectives(compiled.as_text()),
+    }
+
+
+def run_one(arch, shape_name, *, multi_pod=False, local_steps=None,
+            adapter_rank=16, verbose=True, probes=True, build_kwargs=None,
+            mesh_shape=None):
+    """Dry-run one (arch x shape x mesh) combination.
+
+    Two-part methodology (see EXPERIMENTS.md §Dry-run):
+      1. FULL program (layer scan + remat, all local steps): proves the
+         sharding lowers/compiles and gives memory_analysis — the
+         per-device HBM claim.
+      2. COST PROBES: XLA's cost_analysis counts while-loop bodies once, so
+         we lower 1-period and 2-period variants with every structural scan
+         unrolled (straight-line HLO, masked attention tiles skipped) and
+         reconstruct exact totals:
+             body      = probe2 - probe1          (one period, one microstep)
+             microstep = probe1 + body*(P-1)
+             round     = microstep * local_steps  (train; serve: steps=1)
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if mesh_shape is not None:
+        # §Perf: alternative LOGICAL factorization of the same 256 chips
+        # (e.g. 64x4 when LoRA's frozen base fits at low TP degree).
+        import numpy as _np
+        from jax.sharding import Mesh as _Mesh
+        n = int(_np.prod(mesh_shape))
+        mesh = _Mesh(_np.asarray(jax.devices()[:n]).reshape(mesh_shape),
+                     ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+
+    t0 = time.time()
+    bundle, compiled = _lower_compile(cfg, shape, mesh, multi_pod=multi_pod,
+                                      adapter_rank=adapter_rank,
+                                      local_steps=local_steps,
+                                      build_kwargs=build_kwargs)
+    t_full = time.time() - t0
+    full = _analysis(compiled)
+    steps = bundle.meta.get("local_steps", 1)
+
+    # CPU XLA upcasts bf16 dot operands to f32 (CPU has no native bf16), so
+    # memory_analysis() of the bf16 program carries phantom f32 convert
+    # copies a TPU build would not have.  Lower an all-f32 variant (uniform
+    # dtype => no upcast copies) — temp_f32 / 2 is the TPU-bf16 estimate.
+    if probes:
+        f32_cfg = dataclasses.replace(cfg, dtype="float32")
+        try:
+            _, c32 = _lower_compile(f32_cfg, shape, mesh, multi_pod=multi_pod,
+                                    adapter_rank=adapter_rank,
+                                    local_steps=local_steps,
+                                    build_kwargs=build_kwargs)
+            mem_f32 = _mem_dict(c32.memory_analysis())
+        except Exception as e:  # noqa: BLE001
+            mem_f32 = {"error": repr(e)}
+    else:  # multi-pod pass: prove lowering + memory only
+        mem_f32 = {}
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "meta": bundle.meta,
+        "full_compile_s": round(t_full, 1),
+        "full": full,
+        "memory_f32_variant": mem_f32,
+        "tpu_temp_estimate_bytes": mem_f32.get("temp_size_in_bytes", 0) // 2,
+    }
+
+    if probes:
+        from repro.models import runtime
+        t1 = time.time()
+        lpp = cfg.layers_per_period
+        pr = []
+        with runtime.unroll_scans():
+            for p in (1, 2):
+                pcfg = dataclasses.replace(cfg, n_layers=lpp * p, n_periods=p)
+                pkw = dict(build_kwargs or {})
+                pls = None
+                if shape.kind == "train":
+                    pkw["micro_batch"] = bundle.meta["micro_batch"]
+                    pls = 1
+                _, c = _lower_compile(pcfg, shape, mesh, multi_pod=multi_pod,
+                                      adapter_rank=adapter_rank,
+                                      local_steps=pls, build_kwargs=pkw)
+                pr.append(_analysis(c))
+        record["probe_compile_s"] = round(time.time() - t1, 1)
+        record["probes"] = pr
+        record["derived"] = _derive(pr[0], pr[1], cfg.n_periods, steps)
+
+    if verbose:
+        d = record.get("derived", {})
+        print(f"[dryrun] {arch} x {shape_name} mesh={record['mesh']} "
+              f"meta={bundle.meta} full_compile={t_full:.0f}s "
+              f"probes={record.get('probe_compile_s', '-')}s")
+        print(f"  hbm/device: args={full['memory'].get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+              f"temp={full['memory'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+              f"tpu-est={record['tpu_temp_estimate_bytes']/2**30:.2f}GiB")
+        if d:
+            print(f"  per-round/device: flops={d['flops']:.3e} "
+                  f"bytes={d['bytes']:.3e} collective={d['collective_bytes']:.3e}B")
+    return record
+
+
+def _derive(p1, p2, n_periods, local_steps):
+    """Reconstruct exact per-round per-device totals from the two probes."""
+    def get(p, k):
+        if k == "collective_bytes":
+            return float(p["collectives"]["total_bytes"])
+        return float(p["cost"].get(k) or 0.0)
+
+    out = {}
+    for k, src in (("flops", "flops"), ("bytes", "bytes accessed"),
+                   ("collective_bytes", "collective_bytes")):
+        v1, v2 = get(p1, src if k != "collective_bytes" else k), \
+                 get(p2, src if k != "collective_bytes" else k)
+        body = max(v2 - v1, 0.0)
+        out[k] = (v1 + body * (n_periods - 1)) * local_steps
+    # per-op collective breakdown, same extrapolation
+    by_op = {}
+    for op in COLLECTIVE_OPS:
+        v1 = float(p1["collectives"]["bytes_by_op"][op])
+        v2 = float(p2["collectives"]["bytes_by_op"][op])
+        by_op[op] = (v1 + max(v2 - v1, 0.0) * (n_periods - 1)) * local_steps
+    out["collective_bytes_by_op"] = by_op
+    out["local_steps"] = local_steps
+    return out
+
+
+def _mem_dict(mem):
+    out = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        try:
+            out[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    return out
+
+
+def _cost_dict(cost):
+    try:
+        return {"flops": float(cost["flops"]),
+                "bytes accessed": float(cost["bytes accessed"])}
+    except Exception:
+        return {k: float(v) for k, v in dict(cost).items()
+                if isinstance(v, (int, float))}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(SHAPES) + ["all"], default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--local-steps", type=int, default=None)
+    ap.add_argument("--adapter-rank", type=int, default=16)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="lower/compile + memory only (multi-pod pass)")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            tag = f"{arch}_{shape}_{'multipod' if args.multi_pod else 'singlepod'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[dryrun] skip existing {tag}")
+                continue
+            try:
+                rec = run_one(arch, shape, multi_pod=args.multi_pod,
+                              local_steps=args.local_steps,
+                              adapter_rank=args.adapter_rank,
+                              probes=not args.no_probes)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures.append((tag, repr(e)))
+                print(f"[dryrun] FAIL {tag}: {e}")
+                traceback.print_exc(limit=5)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(" ", tag, err)
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

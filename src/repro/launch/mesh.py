@@ -1,0 +1,35 @@
+"""Production mesh construction (spec: single-pod 16x16, multi-pod 2x16x16).
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module never touches jax device state.  On the CPU container
+the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 before
+any jax import (see dryrun.py); smoke tests and benches see 1 device.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — run via "
+            "launch/dryrun.py which forces 512 host platform devices")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CI-scale sharding tests (requires forced host devices)."""
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    return Mesh(np.asarray(devices).reshape(shape), axes)

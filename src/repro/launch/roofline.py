@@ -1,0 +1,135 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Terms per (arch x shape), per device, per round/step — v5e constants:
+
+    compute    = FLOPs / 197e12           [s]   (bf16 MXU peak)
+    memory     = bytes accessed / 819e9   [s]   (HBM bandwidth)
+    collective = collective bytes / 50e9  [s]   (per-link ICI, per-device
+                                                 bytes from partitioned HLO)
+
+MODEL_FLOPS (useful-work yardstick):
+    train:   6 * N_active * tokens   (fwd 2ND + bwd 4ND)
+    prefill: 2 * N_active * tokens
+    decode:  2 * N_active * batch    (+ attention cache reads are counted in
+                                      the memory term, not MODEL_FLOPS)
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.roofline [--dir artifacts/dryrun]
+prints the roofline table (markdown) and writes artifacts/roofline.json.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12   # bf16 / chip
+HBM_BW = 819e9        # bytes/s / chip
+ICI_BW = 50e9         # bytes/s / link
+
+CHIPS = 256  # single-pod roofline (spec: roofline table is single-pod only)
+
+# active params per token (N or N_active), in billions — derived from configs
+# analytically in params_active() below.
+
+
+def params_active(arch):
+    from repro.configs.base import get_config
+    from repro.core import lora
+    cfg = get_config(arch)
+    d, f, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab_size
+    hd, Hq, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    total = active = V * d  # embed (lm head tied -> count once for matmul)
+    from repro.models.model import expanded_positions
+    for _, spec in expanded_positions(cfg):
+        per = 0
+        if spec.kind in ("attn", "shared_attn", "moe"):
+            per += d * (Hq + 2 * Hkv) * hd + Hq * hd * d
+            if spec.kind == "moe":
+                e_all = cfg.n_experts * 3 * d * f
+                e_act = cfg.top_k * 3 * d * f
+                total += per * cfg.n_periods + e_all * cfg.n_periods
+                active += per * cfg.n_periods + e_act * cfg.n_periods
+                continue
+            per += 3 * d * f
+        elif spec.kind == "rwkv6":
+            per += 5 * d * d + 2 * d * f
+        elif spec.kind == "mamba2":
+            d_in = cfg.ssm_expand * d
+            per += d * (2 * d_in + 2 * cfg.ssm_state +
+                        d_in // cfg.ssm_head_dim) + d_in * d
+        mult = 1 if spec.kind == "shared_attn" else cfg.n_periods
+        total += per * mult
+        active += per * mult
+    return total, active
+
+
+def model_flops_per_device(arch, shape_name, meta):
+    from repro.configs.base import SHAPES
+    shape = SHAPES[shape_name]
+    _, n_active = params_active(arch)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6 * n_active * tokens / CHIPS
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2 * n_active * tokens / CHIPS
+    return 2 * n_active * shape.global_batch / CHIPS  # decode: 1 token/seq
+
+
+def analyze(rec):
+    arch, shape = rec["arch"], rec["shape"]
+    d = rec.get("derived")
+    if not d:
+        return None
+    t_comp = d["flops"] / PEAK_FLOPS
+    t_mem = d["bytes"] / HBM_BW
+    t_coll = d["collective_bytes"] / ICI_BW
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mf = model_flops_per_device(arch, shape, rec.get("meta", {}))
+    return {
+        "arch": arch, "shape": shape,
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops": d["flops"],
+        "useful_ratio": mf / d["flops"] if d["flops"] else 0.0,
+        "hbm_args_gib": rec["full"]["memory"].get("argument_size_in_bytes", 0) / 2**30,
+        "hbm_temp_tpu_est_gib": rec.get("tpu_temp_estimate_bytes", 0) / 2**30,
+        "collective_by_op": d.get("collective_bytes_by_op", {}),
+        "local_steps": d.get("local_steps", 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--out", default="artifacts/roofline.json")
+    args = ap.parse_args()
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*_singlepod.json"))):
+        rec = json.load(open(path))
+        row = analyze(rec)
+        if row:
+            rows.append(row)
+
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO flops | HBM args+temp (TPU est, GiB) |")
+    print(hdr)
+    print("|" + "---|" * 8)
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+              f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+              f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+              f"| {r['hbm_args_gib']:.1f}+{r['hbm_temp_tpu_est_gib']:.1f} |")
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nwrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

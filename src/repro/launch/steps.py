@@ -1,0 +1,313 @@
+"""Production step builders + dry-run input specs.
+
+``make_federated_train_step`` is the paper's Algorithm 1 as ONE pjit-able
+XLA program on the production mesh:
+
+  * clients are stacked on a leading axis sharded over the 'pod' mesh axis
+    (one client group per pod);
+  * each client runs `local_steps` AdamW steps on its own adapter copy
+    (vmap isolates them — no cross-pod collective inside the local loop);
+  * gradients are masked by (alternating-freeze parity x selected-rank
+    masks) before the optimizer (paper Eq. 6);
+  * aggregation is the weighted sum of masked active-half deltas — exact
+    under alternating freeze (paper Eq. 3) — lowered by GSPMD to an
+    all-reduce over the pod axis.
+
+Serve steps: prefill (sequence forward collecting the KV cache) and decode
+(one token; full-length caches sequence-sharded with cross-chip
+flash-decoding, window caches as ring buffers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, InputShape, SHAPES
+from repro.core import lora, selection
+from repro.models import model as M
+from repro.optim import adamw
+from repro.sharding import rules
+from repro.sharding.hints import DistConfig
+from repro.utils import tree_add, tree_sub
+
+
+# ---------------------------------------------------------------------------
+# Federated train step
+# ---------------------------------------------------------------------------
+
+
+def make_federated_train_step(cfg: ModelConfig, *, dist: DistConfig,
+                              adapter_rank: int, lr: float = 5e-4,
+                              lr_b_mult: float = 5.0, remat: bool = True):
+    opt_cfg = adamw.AdamWConfig(lr=lr)
+    scale = lora.lora_scale(adapter_rank)
+
+    def loss_fn(adapters, params, mb):
+        # The base model is FROZEN (paper §5.1): stop_gradient prevents the
+        # scan transpose from materializing a full-precision cotangent buffer
+        # for the stacked base weights (16 GiB/chip on kimi-k2).
+        params = jax.tree.map(jax.lax.stop_gradient, params)
+        return M.lm_loss(cfg, params, adapters, mb, dist=dist,
+                         lora_scale=scale, remat=remat)
+
+    def train_step(params, adapters, batch, parity, rank_masks, weights):
+        """One federated round.
+
+        batch leaves: (K, local_steps, ...); rank_masks: (K,)-stacked mask
+        tree; weights: (K,) FedAvg weights; parity: int32 scalar
+        (0=train-a, 1=train-b, 2=both).
+        Returns (new_global_adapters, mean_loss).
+        """
+
+        def local_train(masks_k, batch_k):
+            opt0 = adamw.init_state(adapters)
+
+            def one(carry, mb):
+                local, opt = carry
+                loss, grads = jax.value_and_grad(loss_fn)(local, params, mb)
+                upd = selection.adapter_update_masks(local, masks_k, parity)
+                lr_tree = adamw.lora_plus_lr_tree(local, lr_b_mult)
+                local, opt = adamw.apply_update(opt_cfg, local, grads, opt,
+                                                lr_tree=lr_tree, update_mask=upd)
+                return (local, opt), loss
+
+            (local, _), losses = lax.scan(one, (adapters, opt0), batch_k)
+            delta = tree_sub(local, adapters)
+            upd = selection.adapter_update_masks(adapters, masks_k, parity)
+            masked = jax.tree.map(lambda d, m: d * m.astype(d.dtype), delta, upd)
+            return masked, losses
+
+        masked_all, losses = jax.vmap(local_train)(rank_masks, batch)
+        agg = jax.tree.map(
+            lambda m: jnp.einsum("k...,k->...", m.astype(jnp.float32),
+                                 weights).astype(m.dtype), masked_all)
+        new_adapters = tree_add(adapters, agg)
+        return new_adapters, losses.mean()
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, *, dist: DistConfig,
+                      adapter_rank: int):
+    scale = lora.lora_scale(adapter_rank)
+
+    def prefill(params, adapters, batch):
+        x, _, cache = M.forward(
+            cfg, params, adapters, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            mrope_positions=batch.get("mrope_positions"),
+            dist=dist, lora_scale=scale, collect_cache=True, remat=False)
+        logits = M.logits_from_hidden(cfg, params, x[:, -1:], dist)
+        return logits, cache
+
+    return prefill
+
+
+def make_serve_decode_step(cfg: ModelConfig, *, dist: DistConfig,
+                           adapter_rank: int,
+                           window_override: Optional[int] = None):
+    scale = lora.lora_scale(adapter_rank)
+
+    def decode(params, adapters, batch, cache, pos):
+        logits, new_cache = M.decode_step(
+            cfg, params, adapters, batch.get("tokens"), cache, pos,
+            embeds=batch.get("embeds"),
+            mrope_positions=batch.get("mrope_positions"),
+            dist=dist, lora_scale=scale, window_override=window_override)
+        return logits, new_cache
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_specs(cfg: ModelConfig, B, S, *, lead=(), with_labels=True):
+    """Token/embed stand-ins for one forward (B, S)."""
+    dt = jnp.dtype(cfg.dtype)
+    batch, spec = {}, {}
+    if cfg.frontend:  # audio/vlm carve-out: frontend hands embeddings
+        batch["embeds"] = _sds(lead + (B, S, cfg.d_model), dt)
+    else:
+        batch["tokens"] = _sds(lead + (B, S), jnp.int32)
+    if cfg.rope_mode == "mrope":
+        batch["mrope_positions"] = _sds(lead + (3, B, S), jnp.int32)
+    if with_labels:
+        batch["labels"] = _sds(lead + (B, S), jnp.int32)
+    return batch
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything dryrun/train/serve needs to lower one step."""
+    step_fn: object
+    args: tuple           # ShapeDtypeStructs (or arrays)
+    in_shardings: tuple
+    out_shardings: object
+    donate_argnums: tuple
+    dist: DistConfig
+    meta: dict
+
+
+def build_step(cfg: ModelConfig, shape: InputShape, mesh, *,
+               multi_pod: bool = False, local_steps: Optional[int] = None,
+               micro_batch: Optional[int] = None,
+               adapter_rank: int = 16, rank_budget: int = 2,
+               remat: bool = True,
+               weight_fsdp: bool = True,
+               micro_tokens_per_chip: Optional[int] = None) -> StepBundle:
+    """Construct (step, example inputs, shardings) for one (arch x shape).
+
+    Training consumes the full global batch per round as ``local_steps``
+    sequential local SGD/AdamW steps per client (the paper's local epoch),
+    with the microbatch sized so each chip sees ~micro_tokens_per_chip
+    tokens per step — this is what keeps activations inside v5e HBM.
+    """
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    pods = mesh.shape.get("pod", 1) if multi_pod else 1
+    repl = NamedSharding(mesh, P())
+
+    params_sds = jax.eval_shape(
+        functools.partial(M.init_params, cfg), jax.random.PRNGKey(0))
+    adapters_sds = jax.eval_shape(
+        functools.partial(lora.init_adapters, cfg, rank=adapter_rank,
+                          dtype=jnp.float32), jax.random.PRNGKey(0))
+    # weight_fsdp=False: base weights shard over 'model' only and replicate
+    # across 'data' — zero weight all-gathers.  Valid whenever the base fits
+    # (LoRA's frozen base carries no optimizer state, so unlike full FT
+    # there is no ZeRO pressure to shard it further).  §Perf hillclimb.
+    p_shard = rules.named(mesh, rules.param_specs(
+        params_sds, fsdp="data" if weight_fsdp else None))
+    a_shard = jax.tree.map(lambda _: repl, adapters_sds)
+
+    if shape.kind == "train":
+        K = pods
+        B_local = shape.global_batch // K
+        data_shards = mesh.shape["data"]
+        if micro_tokens_per_chip is None:
+            # large-expert MoE carries FSDP weight gathers + dispatch tensors
+            # per layer — halve the activation budget (see EXPERIMENTS.md)
+            micro_tokens_per_chip = 4096 if cfg.n_experts >= 64 else 8192
+        if micro_batch is None:
+            micro = max(data_shards,
+                        micro_tokens_per_chip * data_shards // shape.seq_len)
+            micro = min(B_local, micro)
+            while B_local % micro:
+                micro -= 1
+            micro_batch = micro
+        B = micro_batch
+        if local_steps is None:
+            local_steps = B_local // micro_batch
+        dist = DistConfig(data=("data",), model=("model",), mesh=mesh)
+        step = make_federated_train_step(cfg, dist=dist,
+                                         adapter_rank=adapter_rank,
+                                         remat=remat)
+        batch = _batch_specs(cfg, B, shape.seq_len, lead=(K, local_steps))
+        pod_ax = "pod" if multi_pod else None
+        b_shard = {}
+        for k, v in batch.items():
+            extra = (None,) * (v.ndim - 3)
+            if k == "mrope_positions":
+                b_shard[k] = NamedSharding(mesh, P(pod_ax, None, None, "data", None))
+            elif v.ndim == 4:  # tokens/labels (K, steps, B, S)
+                b_shard[k] = NamedSharding(mesh, P(pod_ax, None, "data", None))
+            else:              # embeds (K, steps, B, S, d)
+                b_shard[k] = NamedSharding(mesh, P(pod_ax, None, "data", None, None))
+        # rank-mask stand-ins: (K,)-stacked mask tree
+        masks = {p: _sds((K,) + s.shape[:-2] + (adapter_rank,), jnp.float32)
+                 for p, s in _mask_shapes(adapters_sds).items()}
+        m_shard = {p: NamedSharding(mesh, P(*((pod_ax,) + (None,) * (len(s.shape) - 1))))
+                   for p, s in masks.items()}
+        parity = _sds((), jnp.int32)
+        weights = _sds((K,), jnp.float32)
+        args = (params_sds, adapters_sds, batch, parity, masks, weights)
+        in_sh = (p_shard, a_shard, b_shard, repl, m_shard, repl)
+        out_sh = (a_shard, repl)
+        return StepBundle(step, args, in_sh, out_sh, (1,), dist,
+                          {"kind": "train", "clients": K, "micro_batch": B,
+                           "local_steps": local_steps})
+
+    if shape.kind == "prefill":
+        baxes = ("pod", "data") if multi_pod else ("data",)
+        dist = DistConfig(data=baxes, model=("model",), mesh=mesh)
+        step = make_prefill_step(cfg, dist=dist, adapter_rank=adapter_rank)
+        batch = _batch_specs(cfg, shape.global_batch, shape.seq_len,
+                             with_labels=False)
+        b_shard = _serve_batch_shardings(mesh, batch, baxes)
+        cache_sds = jax.eval_shape(
+            functools.partial(M.init_cache, cfg, shape.global_batch,
+                              shape.seq_len))
+        c_shard = rules.named(mesh, rules.cache_specs(
+            cfg, cache_sds, batch_axes=baxes, seq_axes=("model",)))
+        logits_sh = NamedSharding(mesh, P(baxes, None, "model"))
+        args = (params_sds, adapters_sds, batch)
+        in_sh = (p_shard, a_shard, b_shard)
+        out_sh = (logits_sh, c_shard)
+        return StepBundle(step, args, in_sh, out_sh, (), dist,
+                          {"kind": "prefill"})
+
+    # decode
+    B = shape.global_batch
+    if B == 1:
+        baxes = None
+        seq_axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    else:
+        baxes = ("pod", "data") if multi_pod else ("data",)
+        seq_axes = ("model",)
+    window_override = None
+    if shape.name == "long_500k":
+        window_override = cfg.long_context_window
+    dist = DistConfig(data=baxes, model=("model",), seq=seq_axes, mesh=mesh)
+    step = make_serve_decode_step(cfg, dist=dist, adapter_rank=adapter_rank,
+                                  window_override=window_override)
+    batch = _batch_specs(cfg, B, 1, with_labels=False)
+    b_shard = _serve_batch_shardings(mesh, batch, baxes)
+    cache_sds = jax.eval_shape(
+        functools.partial(M.init_cache, cfg, B, shape.seq_len,
+                          window_override=window_override))
+    c_shard = rules.named(mesh, rules.cache_specs(
+        cfg, cache_sds, batch_axes=baxes, seq_axes=seq_axes))
+    pos = _sds((), jnp.int32)
+    logits_sh = NamedSharding(mesh, P(baxes, None, "model"))
+    args = (params_sds, adapters_sds, batch, cache_sds, pos)
+    in_sh = (p_shard, a_shard, b_shard, c_shard, repl)
+    out_sh = (logits_sh, c_shard)
+    return StepBundle(step, args, in_sh, out_sh, (3,), dist,
+                      {"kind": "decode", "window_override": window_override})
+
+
+def _mask_shapes(adapters_sds):
+    out = {}
+    for path, ab in lora.iter_modules(adapters_sds):
+        out[path] = ab["a"]
+    return out
+
+
+def _serve_batch_shardings(mesh, batch, baxes):
+    out = {}
+    for k, v in batch.items():
+        if k == "mrope_positions":
+            out[k] = NamedSharding(mesh, P(None, baxes, None))
+        elif v.ndim == 2:
+            out[k] = NamedSharding(mesh, P(baxes, None))
+        else:
+            out[k] = NamedSharding(mesh, P(baxes, None, None))
+    return out

@@ -1,0 +1,382 @@
+"""Attention: GQA with RoPE/M-RoPE, blockwise (flash-style) train/prefill
+path, decode with (optionally sequence-sharded) KV cache.
+
+Layouts:
+    q:      (B, S, Hq, D)
+    k/v:    (B, S, Hkv, D)
+    cache:  (B, S_cache, Hkv, D)   -- seq-sharded over dist.seq at decode
+
+The train/prefill path is blockwise with an online softmax so the (S, S)
+score matrix is never materialized beyond one (block_q, block_k) tile per
+step — the pure-JAX analogue of the Pallas flash kernel (see
+kernels/decode_attention.py), used for lowering/cost-analysis because Pallas
+TPU kernels cannot be compiled from a CPU-only host.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common, runtime
+from repro.sharding.hints import DistConfig, NO_DIST, resolve_axis
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "q": common.init_linear(kq, d, cfg.n_heads * hd, dtype, bias=cfg.qkv_bias),
+        "k": common.init_linear(kk, d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "v": common.init_linear(kv, d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "o": common.init_linear(ko, cfg.n_heads * hd, d, dtype),
+    }
+
+
+def _project_qkv(p, cfg, x, lora, lora_scale, positions, mrope_positions=None):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+
+    def lget(name):
+        return None if (lora is None or name not in lora) else lora[name]
+
+    q = common.linear(p["q"], x, lget("q"), lora_scale).reshape(B, S, cfg.n_heads, hd)
+    k = common.linear(p["k"], x, lget("k"), lora_scale).reshape(B, S, cfg.n_kv_heads, hd)
+    v = common.linear(p["v"], x, lget("v"), lora_scale).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.rope_mode == "1d":
+        q = common.apply_rope(q, positions, cfg.rope_theta)
+        k = common.apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_mode == "mrope":
+        q = common.apply_mrope(q, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+        k = common.apply_mrope(k, mrope_positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Causal (windowed) attention — direct + blockwise paths
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos, k_pos, window, causal=True):
+    """True where q may attend k (causal, optional sliding window)."""
+    if causal:
+        m = k_pos[None, :] <= q_pos[:, None]
+    else:
+        m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def _direct_attention(q, k, v, q_pos, k_pos, window, scale, causal=True):
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    mask = _mask(q_pos, k_pos, window, causal)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def _blockwise_attention_unrolled(q, k, v, q_pos, k_pos, window, scale,
+                                  causal=True, block_q=2048, block_k=2048):
+    """Python-unrolled blockwise attention for dry-run cost probes: emits one
+    HLO dot per *reachable* tile and skips tiles that are fully masked
+    (above the causal diagonal or outside the sliding window) — matching what
+    the Pallas flash kernel would execute on real hardware, and making
+    cost_analysis reflect useful attention FLOPs exactly."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    outs = []
+    for qi in range(Sq // bq):
+        qblk = qg[:, qi * bq:(qi + 1) * bq]
+        qpos = q_pos[qi * bq:(qi + 1) * bq]
+        m = jnp.full((B, Hkv, G, bq), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        acc = jnp.zeros((B, Hkv, G, bq, D), jnp.float32)
+        # positions are contiguous arange(+static offset); tile bounds are
+        # index-derived (q_offset is 0 for train/prefill).
+        q_lo, q_hi = qi * bq, (qi + 1) * bq - 1
+        for ki in range(Sk // bk):
+            k_lo, k_hi = ki * bk, (ki + 1) * bk - 1
+            if causal and k_lo > q_hi:
+                continue  # entirely above the diagonal
+            if window is not None and k_hi <= q_lo - window:
+                continue  # entirely outside the window
+            kblk = k[:, ki * bk:(ki + 1) * bk]
+            vblk = v[:, ki * bk:(ki + 1) * bk]
+            kpos = k_pos[ki * bk:(ki + 1) * bk]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk).astype(jnp.float32) * scale
+            s = jnp.where(_mask(qpos, kpos, window, causal)[None, None, None],
+                          s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk).astype(jnp.float32)
+            m = m_new
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(jnp.moveaxis(out, 3, 1))
+    out = jnp.concatenate(outs, axis=1).reshape(B, Sq, Hkv, G, D).astype(q.dtype)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def _blockwise_attention(q, k, v, q_pos, k_pos, window, scale,
+                         block_q=512, block_k=1024):
+    """Online-softmax blockwise attention; O(S * block) live memory."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+
+    qg = q.reshape(B, nq, block_q, Hkv, G, D)
+    qp = q_pos.reshape(nq, block_q)
+    kb = k.reshape(B, nk, block_k, Hkv, D)
+    vb = v.reshape(B, nk, block_k, Hkv, D)
+    kp = k_pos.reshape(nk, block_k)
+
+    def q_step(_, qi):
+        qblk, qpos = qi  # (B, bq, Hkv, G, D), (bq,)
+
+        def k_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kpos = ki
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk).astype(jnp.float32) * scale
+            s = jnp.where(_mask(qpos, kpos, window)[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, block_q, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(
+            k_step, (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, jnp.moveaxis(out, 3, 1)  # (B, bq, Hkv, G, D)
+
+    _, outs = lax.scan(q_step, None, (jnp.moveaxis(qg, 1, 0), qp))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hkv, G, D).astype(q.dtype)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def causal_attention(q, k, v, *, window=None, q_offset=0, direct_threshold=2048,
+                     causal=True):
+    """Causal (optionally sliding-window) self attention with GQA."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    scale = q.shape[-1] ** -0.5
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    if max(Sq, Sk) <= direct_threshold or not causal:
+        return _direct_attention(q, k, v, q_pos, k_pos, window, scale, causal)
+    if runtime.unroll_enabled():
+        return _blockwise_attention_unrolled(q, k, v, q_pos, k_pos, window,
+                                             scale, causal)
+    return _blockwise_attention(q, k, v, q_pos, k_pos, window, scale)
+
+
+# ---------------------------------------------------------------------------
+# Decode path (one new token, KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch, cache_len, n_layers_stacked, dtype):
+    """(periods, B, S_cache, Hkv, D) k/v cache for one pattern position."""
+    shape = (n_layers_stacked, batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _decode_partial(q, k_cache, v_cache, pos, k_pos, window, scale):
+    """Partial flash-decode statistics over one cache chunk.
+
+    q: (B, 1, Hq, D); caches: (B, C, Hkv, D); k_pos: (C,) global positions.
+    Returns (o, m, l): unnormalized out (B,Hq,D) fp32, row max, row sum.
+    """
+    B, _, Hq, D = q.shape
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32) * scale
+    valid = (k_pos <= pos) & (k_pos >= 0)  # ring slots never written are < 0
+    if window is not None:
+        valid &= k_pos > (pos - window)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache).astype(jnp.float32)
+    return o.reshape(B, Hq, D), m.reshape(B, Hq), l.reshape(B, Hq)
+
+
+def _ring_positions(cache_len, pos):
+    """Global token position held by each ring-buffer slot.
+
+    Slot j holds the most recent position p with p ≡ j (mod L) and p <= pos;
+    slots that have never been written map to negative positions (masked)."""
+    idx = jnp.arange(cache_len)
+    return pos - jnp.mod(pos - idx, cache_len)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=None, ring=False):
+    """Single-host decode attention (cache unsharded)."""
+    scale = q.shape[-1] ** -0.5
+    if ring:
+        k_pos = _ring_positions(k_cache.shape[1], pos)
+    else:
+        k_pos = jnp.arange(k_cache.shape[1])
+    o, m, l = _decode_partial(q, k_cache, v_cache, pos, k_pos, window, scale)
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out[:, None].astype(q.dtype)  # (B, 1, Hq, D)
+
+
+def decode_attention_sharded(dist: DistConfig, q, k_cache, v_cache, pos,
+                             *, window=None):
+    """Flash-decoding across chips: the KV cache is sharded on its sequence
+    axis over ``dist.seq``; each shard computes partial (o, m, l) and the
+    partials are merged with a log-sum-exp psum — the TPU-native analogue of
+    GPU flash-decoding (DESIGN.md §4)."""
+    if not (dist.active and dist.seq):
+        return decode_attention(q, k_cache, v_cache, pos, window=window)
+
+    mesh = dist.mesh
+    seq_axes = dist.seq
+    batch_axis = resolve_axis(dist, "batch")
+    scale = q.shape[-1] ** -0.5
+    S_total = k_cache.shape[1]
+    n_shards = 1
+    for a in seq_axes:
+        n_shards *= mesh.shape[a]
+    chunk = S_total // n_shards
+
+    def local_fn(q, kc, vc, pos):
+        idx = _linear_axis_index(seq_axes, mesh)
+        k_pos = idx * chunk + jnp.arange(chunk)
+        o, m, l = _decode_partial(q, kc, vc, pos, k_pos, window, scale)
+        # log-sum-exp merge across shards
+        m_g = lax.pmax(m, seq_axes)
+        corr = jnp.exp(m - m_g)
+        l_g = lax.psum(l * corr, seq_axes)
+        o_g = lax.psum(o * corr[..., None], seq_axes)
+        out = o_g / jnp.maximum(l_g, 1e-30)[..., None]
+        return out[:, None].astype(q.dtype)
+
+    qspec = P(batch_axis, None, None, None)
+    cspec = P(batch_axis, seq_axes, None, None)
+    return jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(qspec, cspec, cspec, P()),
+        out_specs=qspec,
+        check_vma=False,
+    )(q, k_cache, v_cache, pos)
+
+
+def _linear_axis_index(axes, mesh):
+    idx = lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * mesh.shape[a] + lax.axis_index(a)
+    return idx
+
+
+def update_cache(dist: DistConfig, cache_k, cache_v, k_new, v_new, pos):
+    """Write the new token's k/v at ``pos``.
+
+    Off-mesh this is a dynamic_update_slice.  With a seq-sharded cache the
+    shard owning ``pos`` does the write locally inside shard_map.
+    """
+    if not (dist.active and dist.seq):
+        k = lax.dynamic_update_slice_in_dim(cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
+        v = lax.dynamic_update_slice_in_dim(cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
+        return k, v
+
+    mesh = dist.mesh
+    seq_axes = dist.seq
+    batch_axis = resolve_axis(dist, "batch")
+    S_total = cache_k.shape[1]
+    n_shards = 1
+    for a in seq_axes:
+        n_shards *= mesh.shape[a]
+    chunk = S_total // n_shards
+
+    def local_fn(kc, vc, kn, vn, pos):
+        idx = _linear_axis_index(seq_axes, mesh)
+        local = jnp.clip(pos - idx * chunk, 0, chunk - 1)
+        owns = (pos >= idx * chunk) & (pos < (idx + 1) * chunk)
+        kw = lax.dynamic_update_slice_in_dim(kc, kn.astype(kc.dtype), local, axis=1)
+        vw = lax.dynamic_update_slice_in_dim(vc, vn.astype(vc.dtype), local, axis=1)
+        return (jnp.where(owns, kw, kc), jnp.where(owns, vw, vc))
+
+    cspec = P(batch_axis, seq_axes, None, None)
+    nspec = P(batch_axis, None, None, None)
+    return jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(cspec, cspec, nspec, nspec, P()),
+        out_specs=(cspec, cspec),
+        check_vma=False,
+    )(cache_k, cache_v, k_new, v_new, pos)
+
+
+# ---------------------------------------------------------------------------
+# Full block-level entry points
+# ---------------------------------------------------------------------------
+
+
+def attention_block(p, cfg, x, lora, lora_scale, *, window=None,
+                    positions=None, mrope_positions=None, dist=NO_DIST):
+    """Train/prefill self-attention sublayer (no residual/norm)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(p, cfg, x, lora, lora_scale, positions, mrope_positions)
+    out = causal_attention(q, k, v, window=window, causal=not cfg.is_encoder)
+    lo = None if (lora is None or "o" not in lora) else lora["o"]
+    return common.linear(p["o"], out.reshape(B, S, -1), lo, lora_scale), (k, v)
+
+
+def attention_decode_block(p, cfg, x, lora, lora_scale, cache, pos, *,
+                           window=None, mrope_positions=None, dist=NO_DIST):
+    """Decode self-attention sublayer: x is (B, 1, d).
+
+    When the cache is a ring buffer (windowed attention, cache_len == window),
+    writes land at pos % cache_len and slot->position mapping is reconstructed
+    for masking; otherwise the cache is addressed directly (and may be
+    seq-sharded over ``dist.seq``)."""
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q, k_new, v_new = _project_qkv(p, cfg, x, lora, lora_scale, positions,
+                                   mrope_positions)
+    cache_len = cache["k"].shape[1]
+    ring = window is not None and cache_len <= window
+    write_pos = jnp.mod(pos, cache_len) if ring else pos
+    ck, cv = update_cache(dist, cache["k"], cache["v"], k_new, v_new, write_pos)
+    if ring:
+        out = decode_attention(q, ck, cv, pos, window=window, ring=True)
+    else:
+        out = decode_attention_sharded(dist, q, ck, cv, pos, window=window)
+    lo = None if (lora is None or "o" not in lora) else lora["o"]
+    y = common.linear(p["o"], out.reshape(B, 1, -1), lo, lora_scale)
+    return y, {"k": ck, "v": cv}

@@ -1,0 +1,130 @@
+"""Shared model building blocks: norms, RoPE / M-RoPE, linears with LoRA.
+
+Parameter convention: all weight matrices are stored ``(in_features,
+out_features)`` and applied as ``y = x @ w``.  Relative to the paper's
+``ΔW = B A`` (with ``y = W x``): the paper's input-side ``A`` is our
+``lora['a']`` of shape (in, r); the paper's output-side ``B`` is our
+``lora['b']`` of shape (r, out).  Alternating freeze trains 'b' on odd rounds
+and 'a' on even rounds (paper Algorithm 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.hints import shard_hint
+
+
+# ---------------------------------------------------------------------------
+# Linear / LoRA
+# ---------------------------------------------------------------------------
+
+
+def init_linear(key, d_in, d_out, dtype, bias=False, scale=None):
+    if scale is None:
+        scale = d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x, lora=None, lora_scale=1.0):
+    """y = x @ w (+ bias) (+ lora_scale * (x @ a) @ b)."""
+    y = x @ p["w"]
+    if "bias" in p:
+        y = y + p["bias"]
+    if lora is not None:
+        y = y + ((x @ lora["a"].astype(x.dtype)) @ lora["b"].astype(x.dtype)) * lora_scale
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["scale"]
+
+
+def init_layernorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * p["scale"] + p["bias"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim, theta, dtype=jnp.float32):
+    half = head_dim // 2
+    return (theta ** (-jnp.arange(0, half, dtype=dtype) / half))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, D); positions: (..., S) int."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_mrope(x, positions_thw, theta, sections):
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, D); positions_thw: (3, B, S) int — temporal/height/width ids.
+    ``sections`` splits the D/2 rotary frequencies into (t, h, w) groups.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    # per-frequency position source: section index per frequency
+    sec_id = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)
+    ])  # (half,)
+    # positions_thw: (3, B, S) -> select per frequency -> (B, S, half)
+    pos = jnp.moveaxis(positions_thw, 0, -1)  # (B, S, 3)
+    pos_f = pos.astype(jnp.float32)[..., sec_id]  # (B, S, half)
+    ang = pos_f * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab, d, dtype):
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p, x):
+    return x @ p["table"].T
+
+
+__all__ = [n for n in dir() if not n.startswith("_")]

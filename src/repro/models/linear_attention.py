@@ -1,0 +1,136 @@
+"""Chunked linear attention with (data-dependent) decay — the shared engine
+for RWKV-6 (vector decay per key channel, bonus on the diagonal) and Mamba-2
+SSD (scalar decay per head).
+
+Semantics (per head, state S in R^{Dk x Dv}):
+
+    S_t = diag(exp(logw_t)) S_{t-1} + k_t v_t^T
+    y_t = q_t . (D'_t S_{t-1} + diag(b_t) k_t v_t^T)
+
+where ``include_current_decay`` selects D'_t = diag(exp(logw_t)) (Mamba-2:
+the state is decayed before the current token is read) or D'_t = I with a
+learned diagonal ``bonus`` (RWKV-6: y reads the undecayed previous state plus
+a u-weighted current-token term).
+
+The chunked algorithm materializes only a (B, H, C, C, Dk) intra-chunk decay
+tensor per scan step; cumulative-log differences keep everything in exp(<=0)
+territory, so it is numerically safe for arbitrarily strong decay.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import runtime
+
+
+def chunked_linear_attention(q, k, v, logw, *, bonus=None,
+                             include_current_decay=True, chunk=64,
+                             state0=None):
+    """q, k, logw: (B, T, H, Dk); v: (B, T, H, Dv); bonus: (H, Dk) or None.
+
+    Returns (y, final_state): y (B, T, H, Dv), state (B, H, Dk, Dv) fp32.
+    T must be divisible by chunk (pad upstream if needed).
+    """
+    B, T, H, Dk = q.shape
+    Dv = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    n = T // chunk
+
+    qf = q.astype(jnp.float32).reshape(B, n, chunk, H, Dk)
+    kf = k.astype(jnp.float32).reshape(B, n, chunk, H, Dk)
+    vf = v.astype(jnp.float32).reshape(B, n, chunk, H, Dv)
+    wf = logw.astype(jnp.float32).reshape(B, n, chunk, H, Dk)
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+
+    idx = jnp.arange(chunk)
+    strict = idx[:, None] > idx[None, :]  # (C, C): t strictly after j
+
+    def step(S, inp):
+        qc, kc, vc, wc = inp  # (B, C, H, *)
+        L = jnp.cumsum(wc, axis=1)  # (B, C, H, Dk) inclusive cumulative log decay
+        if include_current_decay:
+            Lq = L
+        else:
+            Lq = jnp.concatenate(
+                [jnp.zeros_like(L[:, :1]), L[:, :-1]], axis=1)  # L_{t-1}
+        # cross-chunk: y_cross_t = (q_t * exp(Lq_t)) . S_prev
+        y_cross = jnp.einsum("bchk,bhkv->bchv", qc * jnp.exp(Lq), S)
+        # intra-chunk (strictly past tokens): decay exp(Lq_t - L_j), t > j
+        # guard the masked upper triangle before exp to avoid overflow.
+        diff = Lq[:, :, None] - L[:, None]  # (B, C, C, H, Dk)
+        diff = jnp.where(strict[None, :, :, None, None], diff, -jnp.inf)
+        att = jnp.einsum("bchk,bcthk,bthk->bcth", qc, jnp.exp(diff), kc)
+        y_intra = jnp.einsum("bcth,bthv->bchv", att, vc)
+        # diagonal (current token): decay product over an empty range is the
+        # identity, so the coefficient is 1 (mamba) or the learned bonus (rwkv).
+        if include_current_decay or bonus is None:
+            bq = qc
+        else:
+            bq = qc * bonus.astype(jnp.float32)
+        y_diag = jnp.einsum("bchk,bchk->bch", bq, kc)[..., None] * vc
+        # state update: S_new = exp(L_C) * S + sum_j exp(L_C - L_j) k_j v_j^T
+        Lc = L[:, -1:]  # (B, 1, H, Dk)
+        S_new = S * jnp.exp(Lc[:, 0])[..., None] + jnp.einsum(
+            "bthk,bthv->bhkv", kf_scaled(kc, L, Lc), vc)
+        return S_new, y_cross + y_intra + y_diag
+
+    def kf_scaled(kc, L, Lc):
+        return kc * jnp.exp(Lc - L)
+
+    # Dry-run cost probes trace with scans unrolled; cap the unroll at 32
+    # chunk iterations — beyond that (32k prefill = 128 chunks) compile time
+    # explodes while the chunk recurrence is only ~2% of layer FLOPs for
+    # these archs, so the residual while-loop undercount is negligible
+    # (documented in EXPERIMENTS.md §Dry-run).
+    if runtime.unroll_enabled() and n <= 32:
+        S = state0
+        ys = []
+        for i in range(n):
+            S, y = step(S, (qf[:, i], kf[:, i], vf[:, i], wf[:, i]))
+            ys.append(y)
+        y = jnp.concatenate(ys, axis=1).reshape(B, T, H, Dv)
+        return y.astype(q.dtype), S
+    xs = (jnp.moveaxis(qf, 1, 0), jnp.moveaxis(kf, 1, 0),
+          jnp.moveaxis(vf, 1, 0), jnp.moveaxis(wf, 1, 0))
+    S, ys = lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, Dv)
+    return y.astype(q.dtype), S
+
+
+def linear_attention_step(S, q, k, v, logw, *, bonus=None,
+                          include_current_decay=True):
+    """Single decode step.  q,k,logw: (B,H,Dk); v: (B,H,Dv); S: (B,H,Dk,Dv)."""
+    qf, kf_, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    kv = jnp.einsum("bhk,bhv->bhkv", kf_, vf)
+    if include_current_decay:
+        S_new = S * w[..., None] + kv
+        y = jnp.einsum("bhk,bhkv->bhv", qf, S_new)
+    else:
+        b = 1.0 if bonus is None else bonus.astype(jnp.float32)
+        y = jnp.einsum("bhk,bhkv->bhv", qf, S) + jnp.einsum(
+            "bhk,bhv->bhv", qf * b * kf_, vf)
+        S_new = S * w[..., None] + kv
+    return y.astype(q.dtype), S_new
+
+
+def reference_scan(q, k, v, logw, *, bonus=None, include_current_decay=True,
+                   state0=None):
+    """Step-by-step oracle for tests (same signature/semantics, O(T) scan)."""
+    B, T, H, Dk = q.shape
+    Dv = v.shape[-1]
+    S0 = state0 if state0 is not None else jnp.zeros((B, H, Dk, Dv), jnp.float32)
+
+    def step(S, inp):
+        qt, kt, vt, wt = inp
+        y, S = linear_attention_step(S, qt, kt, vt, wt, bonus=bonus,
+                                     include_current_decay=include_current_decay)
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, logw))
+    S, ys = lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1), S

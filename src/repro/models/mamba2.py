@@ -1,0 +1,142 @@
+"""Mamba-2 (SSD) block — chunked scan built on the shared linear-attention
+engine (scalar per-head decay).  Used by zamba2's hybrid backbone.
+
+Mapping to the linear-attention semantics (per head, state (N, P)):
+    h_t = a_t h_{t-1} + (dt_t x_t) B_t^T     a_t = exp(-exp(A_log) dt_t)
+    y_t = C_t . h_t + D x_t
+=>  k = B_t (N,), v = dt_t * x_t (P,), q = C_t, logw = -exp(A_log) dt_t,
+    include_current_decay=True.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.linear_attention import (chunked_linear_attention,
+                                           linear_attention_step)
+from repro.sharding.hints import NO_DIST, shard_hint
+
+CONV_K = 4
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    return d_inner, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba2_block(key, cfg, dtype):
+    d = cfg.d_model
+    d_inner, H, P, N = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * N + H  # z, x, B, C, dt
+    conv_dim = d_inner + 2 * N
+    return {
+        "norm": common.init_rmsnorm(d, dtype),
+        "ssm_in": common.init_linear(ks[0], d, d_in_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, conv_dim)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "D": jnp.ones((H,), dtype),
+        "out_norm": common.init_rmsnorm(d_inner, dtype),
+        "ssm_out": common.init_linear(ks[2], d_inner, d, dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_inner, H, P, N = _dims(cfg)
+    z, xc, dt = jnp.split(proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    return z, xc, dt  # xc = (x ++ B ++ C) fed through the conv
+
+
+def _causal_conv(w, b, xc, conv_state=None):
+    """Depthwise causal conv1d.  xc: (B, S, C); conv_state: (B, K-1, C)."""
+    Bsz = xc.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((Bsz, CONV_K - 1, xc.shape[-1]), xc.dtype)
+    xpad = jnp.concatenate([conv_state, xc], axis=1)
+    out = sum(xpad[:, i:i + xc.shape[1]] * w[i] for i in range(CONV_K)) + b
+    new_state = xpad[:, -(CONV_K - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_block(p, cfg, x, lora, lora_scale, *, state=None, dist=NO_DIST):
+    """Sequence form.  x: (B, S, d) -> (x_out, new_state)."""
+    Bsz, S, d = x.shape
+    d_inner, H, P, N = _dims(cfg)
+
+    def lget(name):
+        return None if (lora is None or name not in lora) else lora[name]
+
+    conv_state = None if state is None else state["conv"]
+    S0 = None if state is None else state["S"]
+
+    xn = common.rmsnorm(p["norm"], x, cfg.norm_eps)
+    proj = common.linear(p["ssm_in"], xn, lget("ssm_in"), lora_scale)
+    z, xc, dt_raw = _split_proj(cfg, proj)
+    xc_conv, conv_new = _causal_conv(p["conv_w"], p["conv_b"], xc, conv_state)
+    x_in, B_in, C_in = jnp.split(xc_conv, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    logw = -jnp.exp(p["A_log"]) * dt                                  # (B,S,H)
+
+    xh = x_in.reshape(Bsz, S, H, P)
+    v = xh * dt[..., None].astype(xh.dtype)                 # (B,S,H,P)
+    k = jnp.broadcast_to(B_in[:, :, None, :], (Bsz, S, H, N))
+    q = jnp.broadcast_to(C_in[:, :, None, :], (Bsz, S, H, N))
+    v = shard_hint(v, dist, "batch", None, "heads", None)
+
+    from repro.models import runtime
+    base_chunk = 256 if runtime.unroll_enabled() else 64  # probe-trace speed
+    chunk = min(base_chunk, S) if S % min(base_chunk, S) == 0 else 1
+    logw_full = jnp.broadcast_to(logw[..., None], (Bsz, S, H, N))
+    y, S_new = chunked_linear_attention(
+        q, k, v, logw_full, include_current_decay=True,
+        chunk=chunk, state0=S0)
+    y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(Bsz, S, d_inner)
+    y = common.rmsnorm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = common.linear(p["ssm_out"], y, lget("ssm_out"), lora_scale)
+    new_state = {"conv": conv_new, "S": S_new}
+    return x + out, new_state
+
+
+def mamba2_decode(p, cfg, x, lora, lora_scale, state, dist=NO_DIST):
+    """Single-token form via the exact step recurrence.  x: (B, 1, d)."""
+    Bsz, _, d = x.shape
+    d_inner, H, P, N = _dims(cfg)
+
+    def lget(name):
+        return None if (lora is None or name not in lora) else lora[name]
+
+    xn = common.rmsnorm(p["norm"], x, cfg.norm_eps)
+    proj = common.linear(p["ssm_in"], xn, lget("ssm_in"), lora_scale)
+    z, xc, dt_raw = _split_proj(cfg, proj)
+    xc_conv, conv_new = _causal_conv(p["conv_w"], p["conv_b"], xc, state["conv"])
+    x_in, B_in, C_in = jnp.split(xc_conv, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    logw = -jnp.exp(p["A_log"]) * dt                                        # (B,H)
+
+    xh = x_in.reshape(Bsz, H, P)
+    v = xh * dt[..., None].astype(xh.dtype)
+    k = jnp.broadcast_to(B_in[:, 0, None, :], (Bsz, H, N))
+    q = jnp.broadcast_to(C_in[:, 0, None, :], (Bsz, H, N))
+
+    y, S_new = linear_attention_step(state["S"], q, k, v, logw[..., None],
+                                     include_current_decay=True)
+    y = y + xh * p["D"][None, :, None].astype(xh.dtype)
+    y = y.reshape(Bsz, 1, d_inner)
+    y = common.rmsnorm(p["out_norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = common.linear(p["ssm_out"], y, lget("ssm_out"), lora_scale)
+    return x + out, {"conv": conv_new, "S": S_new}
+
+
+def init_mamba2_state(cfg, batch, dtype):
+    d_inner, H, P, N = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, d_inner + 2 * N), dtype),
+        "S": jnp.zeros((batch, H, N, P), jnp.float32),
+    }

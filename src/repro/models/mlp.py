@@ -1,0 +1,46 @@
+"""Dense MLP blocks: SwiGLU (llama/qwen/gemma family) and GELU (encoder,
+musicgen)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.sharding.hints import NO_DIST, shard_hint
+
+
+def init_swiglu(key, d_model, d_ff, dtype):
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "gate": common.init_linear(kg, d_model, d_ff, dtype),
+        "up": common.init_linear(ku, d_model, d_ff, dtype),
+        "down": common.init_linear(kd, d_ff, d_model, dtype),
+    }
+
+
+def swiglu(p, x, lora=None, lora_scale=1.0, dist=NO_DIST):
+    def lget(name):
+        return None if (lora is None or name not in lora) else lora[name]
+
+    g = common.linear(p["gate"], x, lget("gate"), lora_scale)
+    u = common.linear(p["up"], x, lget("up"), lora_scale)
+    h = jax.nn.silu(g) * u
+    h = shard_hint(h, dist, "batch", None, "ff")
+    return common.linear(p["down"], h, lget("down"), lora_scale)
+
+
+def init_gelu_mlp(key, d_model, d_ff, dtype):
+    ku, kd = jax.random.split(key, 2)
+    return {
+        "up": common.init_linear(ku, d_model, d_ff, dtype, bias=True),
+        "down": common.init_linear(kd, d_ff, d_model, dtype, bias=True),
+    }
+
+
+def gelu_mlp(p, x, lora=None, lora_scale=1.0, dist=NO_DIST):
+    def lget(name):
+        return None if (lora is None or name not in lora) else lora[name]
+
+    h = jax.nn.gelu(common.linear(p["up"], x, lget("up"), lora_scale))
+    h = shard_hint(h, dist, "batch", None, "ff")
+    return common.linear(p["down"], h, lget("down"), lora_scale)

@@ -1,0 +1,442 @@
+"""Model assembly: layer-group scan over pattern periods, LM / encoder heads,
+train (sequence) and serve (decode) entry points.
+
+Parameter layout (nested dict pytree):
+
+    params = {
+      'embed':      {'table': (V, d)},
+      'pos_embed':  {'table': (max_pos, d)}            # encoder only
+      'blocks':     {'<pos>': <block params stacked over periods>},
+      'shared':     {'<pos>': <single-copy block params>},   # zamba2
+      'final_norm': {...},
+      'lm_head':    {'w': (d, V)} | absent (tied)      # decoder LMs tie
+      'classifier': {'w','bias'}                        # encoder head (frozen)
+    }
+
+Adapters mirror this structure (see core/lora.py): for every LoRA-target
+linear in a block there is {'a': (..., d_in, r), 'b': (..., r, d_out)} with
+the same leading period-stacking as the base block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, mamba2, mlp, moe, runtime, rwkv6
+from repro.sharding.hints import NO_DIST, DistConfig, shard_hint
+
+
+def _scan_periods(fn, carry, xs, n_periods):
+    """lax.scan over period-stacked params — or a python loop under the
+    dry-run unroll context (see models/runtime.py)."""
+    if not runtime.unroll_enabled():
+        return lax.scan(fn, carry, xs)
+    ys = []
+    for i in range(n_periods):
+        per = jax.tree.map(lambda a: a[i], xs)
+        carry, y = fn(carry, per)
+        ys.append(y)
+    stacked = jax.tree.map(lambda *t: jnp.stack(t), *ys) if ys else None
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# Pattern expansion
+# ---------------------------------------------------------------------------
+
+
+def expanded_positions(cfg: ModelConfig):
+    """[(pos_idx, LayerSpec-with-count-1-semantics)] — one entry per layer
+    inside a period; LayerSpecs with count=c expand to c positions."""
+    out = []
+    i = 0
+    for spec in cfg.pattern:
+        for _ in range(spec.count):
+            out.append((i, spec))
+            i += 1
+    return out
+
+
+def _param_dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply dispatch
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg, kind, dtype):
+    if kind in ("attn", "shared_attn"):
+        k1, k2, kn1, kn2 = jax.random.split(key, 4)
+        p = {
+            "ln1": common.init_rmsnorm(cfg.d_model, dtype)
+            if not cfg.is_encoder else common.init_layernorm(cfg.d_model, dtype),
+            "attn": attention.init_attention(k1, cfg, dtype),
+            "ln2": common.init_rmsnorm(cfg.d_model, dtype)
+            if not cfg.is_encoder else common.init_layernorm(cfg.d_model, dtype),
+            "mlp": (mlp.init_gelu_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+                    if cfg.is_encoder or cfg.family == "audio"
+                    else mlp.init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype)),
+        }
+        return p
+    if kind == "moe":
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": common.init_rmsnorm(cfg.d_model, dtype),
+            "attn": attention.init_attention(k1, cfg, dtype),
+            "ln2": common.init_rmsnorm(cfg.d_model, dtype),
+            "moe": moe.init_moe(k2, cfg, dtype),
+        }
+    if kind == "rwkv6":
+        return rwkv6.init_rwkv6_block(key, cfg, dtype)
+    if kind == "mamba2":
+        return mamba2.init_mamba2_block(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def _norm(cfg, p, x):
+    if cfg.is_encoder:
+        return common.layernorm(p, x, cfg.norm_eps)
+    return common.rmsnorm(p, x, cfg.norm_eps)
+
+
+def _apply_block_seq(p, cfg, kind, x, lora, lora_scale, spec, *,
+                     positions, mrope_positions, state, dist):
+    """Sequence (train/prefill) form.  Returns (x, new_state_or_cache, aux)."""
+    if kind in ("attn", "shared_attn", "moe"):
+        attn_out, (k, v) = attention.attention_block(
+            p["attn"], cfg, _norm(cfg, p["ln1"], x), lora, lora_scale,
+            window=spec.window, positions=positions,
+            mrope_positions=mrope_positions, dist=dist)
+        x = x + attn_out
+        h = _norm(cfg, p["ln2"], x)
+        if kind == "moe":
+            y, aux = moe.moe_mlp(p["moe"], cfg, h, lora, lora_scale, dist=dist)
+        else:
+            aux = 0.0
+            if cfg.is_encoder or cfg.family == "audio":
+                y = mlp.gelu_mlp(p["mlp"], h, lora, lora_scale, dist=dist)
+            else:
+                y = mlp.swiglu(p["mlp"], h, lora, lora_scale, dist=dist)
+        return x + y, {"k": k, "v": v}, aux
+    if kind == "rwkv6":
+        x, st = rwkv6.rwkv6_block(p, cfg, x, lora, lora_scale, state=state, dist=dist)
+        return x, st, 0.0
+    if kind == "mamba2":
+        x, st = mamba2.mamba2_block(p, cfg, x, lora, lora_scale, state=state, dist=dist)
+        return x, st, 0.0
+    raise ValueError(kind)
+
+
+def _apply_block_decode(p, cfg, kind, x, lora, lora_scale, spec, cache, pos, *,
+                        window_override=None, mrope_positions=None, dist,
+                        seq_sharded=False):
+    """Decode form (one token).  Returns (x, new_cache)."""
+    if kind in ("attn", "shared_attn", "moe"):
+        window = spec.window if spec.window is not None else window_override
+        eff_dist = dist if seq_sharded else _no_seq(dist)
+        attn_out, new_kv = attention.attention_decode_block(
+            p["attn"], cfg, _norm(cfg, p["ln1"], x), lora, lora_scale,
+            cache, pos, window=window, mrope_positions=mrope_positions,
+            dist=eff_dist)
+        x = x + attn_out
+        h = _norm(cfg, p["ln2"], x)
+        if kind == "moe":
+            y, _ = moe.moe_mlp(p["moe"], cfg, h, lora, lora_scale, dist=dist)
+        else:
+            if cfg.is_encoder or cfg.family == "audio":
+                y = mlp.gelu_mlp(p["mlp"], h, lora, lora_scale, dist=dist)
+            else:
+                y = mlp.swiglu(p["mlp"], h, lora, lora_scale, dist=dist)
+        return x + y, new_kv
+    if kind == "rwkv6":
+        return rwkv6.rwkv6_decode(p, cfg, x, lora, lora_scale, cache, dist=dist)
+    if kind == "mamba2":
+        return mamba2.mamba2_decode(p, cfg, x, lora, lora_scale, cache, dist=dist)
+    raise ValueError(kind)
+
+
+def _no_seq(dist: DistConfig):
+    import dataclasses
+    if dist is None or not dist.active:
+        return dist
+    return dataclasses.replace(dist, seq=None)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = _param_dtype(cfg)
+    keys = jax.random.split(key, 8)
+    positions = expanded_positions(cfg)
+    params = {
+        "embed": common.init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": {},
+        "final_norm": (common.init_layernorm(cfg.d_model, dtype) if cfg.is_encoder
+                       else common.init_rmsnorm(cfg.d_model, dtype)),
+    }
+    shared = {}
+    bkey = jax.random.split(keys[1], len(positions))
+    for (i, spec), k in zip(positions, bkey):
+        if spec.kind == "shared_attn":
+            shared[str(i)] = _init_block(k, cfg, spec.kind, dtype)
+        else:
+            pk = jax.random.split(k, cfg.n_periods)
+            params["blocks"][str(i)] = jax.vmap(
+                lambda kk: _init_block(kk, cfg, spec.kind, dtype))(pk)
+    if shared:
+        params["shared"] = shared
+    if cfg.is_encoder:
+        params["pos_embed"] = common.init_embedding(keys[2], 512 + 2, cfg.d_model, dtype)
+        params["classifier"] = common.init_linear(keys[3], cfg.d_model, cfg.n_classes,
+                                                  dtype, bias=True)
+    if not cfg.tie_embeddings and not cfg.is_encoder:
+        params["lm_head"] = common.init_linear(keys[4], cfg.d_model, cfg.vocab_size,
+                                               dtype, scale=cfg.d_model ** -0.5)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (sequence form: train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ModelConfig, params, adapters, *, tokens=None, embeds=None,
+            mrope_positions=None, dist: DistConfig = NO_DIST,
+            lora_scale: float = 1.0, collect_cache: bool = False,
+            remat: bool = True):
+    """Returns (hidden, aux_loss, cache_stacks).
+
+    ``cache_stacks`` is a {pos: stacked-over-periods} pytree of per-layer
+    kv/state when collect_cache (prefill), else None.
+    """
+    if embeds is None:
+        x = common.embed(params["embed"], tokens)
+        if cfg.is_encoder:
+            B, S = tokens.shape
+            x = x + common.embed(params["pos_embed"], jnp.arange(S))[None]
+    else:
+        x = embeds
+    B, S = x.shape[:2]
+    x = shard_hint(x, dist, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pos_list = expanded_positions(cfg)
+
+    blocks = params["blocks"]
+    block_adapters = (adapters or {}).get("blocks",
+                                          {k: {} for k in params["blocks"]})
+
+    def period_fn(carry, t):
+        """Scan over the period INDEX; params/adapters are closure constants
+        sliced inside the (rematted) body — so the backward residual per
+        period is just the carry, not a gathered copy of the period's weights
+        (a multi-GiB/chip saving on stacked-expert models; DESIGN.md §6)."""
+        x, aux = carry
+        per_blocks = jax.tree.map(
+            lambda a: lax.dynamic_index_in_dim(a, t, keepdims=False), blocks)
+        per_adapters = jax.tree.map(
+            lambda a: lax.dynamic_index_in_dim(a, t, keepdims=False),
+            block_adapters)
+        caches = {}
+        for i, spec in pos_list:
+            key = str(i)
+            if spec.kind == "shared_attn":
+                p = params["shared"][key]
+                lora = None if adapters is None else adapters.get("shared", {}).get(key)
+            else:
+                p = per_blocks[key]
+                lora = None if adapters is None else per_adapters.get(key)
+            x, cache, aux_i = _apply_block_seq(
+                p, cfg, spec.kind, x, lora, lora_scale, spec,
+                positions=positions, mrope_positions=mrope_positions,
+                state=None, dist=dist)
+            x = shard_hint(x, dist, "batch", None, None)
+            caches[key] = cache
+            aux = aux + aux_i
+        return (x, aux), (caches if collect_cache else 0)
+
+    fn = jax.checkpoint(period_fn) if remat else period_fn
+    (x, aux), caches = _scan_periods(fn, (x, jnp.zeros((), jnp.float32)),
+                                     jnp.arange(cfg.n_periods), cfg.n_periods)
+    x = _norm(cfg, params["final_norm"], x)
+    return x, aux, (caches if collect_cache else None)
+
+
+def logits_from_hidden(cfg, params, x, dist=NO_DIST):
+    if "lm_head" in params:
+        logits = common.linear(params["lm_head"], x)
+    else:
+        logits = common.unembed(params["embed"], x)
+    return shard_hint(logits, dist, "batch", None, "vocab")
+
+
+def lm_loss(cfg: ModelConfig, params, adapters, batch, *, dist=NO_DIST,
+            lora_scale=1.0, remat=True):
+    """Next-token cross entropy (+ router aux).  batch: tokens/embeds, labels."""
+    x, aux, _ = forward(cfg, params, adapters, tokens=batch.get("tokens"),
+                        embeds=batch.get("embeds"),
+                        mrope_positions=batch.get("mrope_positions"),
+                        dist=dist, lora_scale=lora_scale, remat=remat)
+    logits = logits_from_hidden(cfg, params, x, dist).astype(jnp.float32)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = -ll.mean()
+    if cfg.n_experts:
+        loss = loss + cfg.router_aux_weight * aux / max(cfg.n_layers, 1)
+    return loss
+
+
+def classifier_loss(cfg: ModelConfig, params, adapters, batch, *, dist=NO_DIST,
+                    lora_scale=1.0):
+    """Encoder classification loss (paper track): CLS pooling + frozen head."""
+    x, _, _ = forward(cfg, params, adapters, tokens=batch["tokens"], dist=dist,
+                      lora_scale=lora_scale, remat=False)
+    pooled = x[:, 0]
+    logits = common.linear(params["classifier"], pooled).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.take_along_axis(logp, batch["label"][:, None], axis=-1).mean()
+    return loss
+
+
+def classify(cfg, params, adapters, tokens, *, lora_scale=1.0):
+    x, _, _ = forward(cfg, params, adapters, tokens=tokens, lora_scale=lora_scale,
+                      remat=False)
+    return common.linear(params["classifier"], x[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve) path
+# ---------------------------------------------------------------------------
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int, *,
+               window_override: Optional[int] = None):
+    """{pos: dict of ShapeDtypeStruct-like shapes} — actual init in init_cache.
+    Full-attention positions get a seq_len cache (seq-shardable); windowed
+    positions get a ring cache of the window size."""
+    spec = {}
+    for i, s in expanded_positions(cfg):
+        if s.kind in ("attn", "shared_attn", "moe"):
+            window = s.window if s.window is not None else window_override
+            clen = min(seq_len, window) if window else seq_len
+            spec[str(i)] = {"kind": "kv", "len": clen,
+                            "seq_sharded": window is None,
+                            "shared": s.kind == "shared_attn"}
+        elif s.kind == "rwkv6":
+            spec[str(i)] = {"kind": "rwkv6", "shared": False}
+        elif s.kind == "mamba2":
+            spec[str(i)] = {"kind": "mamba2", "shared": False}
+    return spec
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+               window_override: Optional[int] = None):
+    dtype = _param_dtype(cfg)
+    out = {}
+    for key, s in cache_spec(cfg, batch, seq_len, window_override=window_override).items():
+        if s["kind"] == "kv":
+            c = {"k": jnp.zeros((cfg.n_periods, batch, s["len"], cfg.n_kv_heads,
+                                 cfg.head_dim), dtype),
+                 "v": jnp.zeros((cfg.n_periods, batch, s["len"], cfg.n_kv_heads,
+                                 cfg.head_dim), dtype)}
+        elif s["kind"] == "rwkv6":
+            st = rwkv6.init_rwkv6_state(cfg, batch, dtype)
+            c = jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape), st)
+        else:
+            st = mamba2.init_mamba2_state(cfg, batch, dtype)
+            c = jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape), st)
+        out[key] = c
+    return out
+
+
+def pad_prefill_cache(cfg: ModelConfig, cache, prefill_len: int,
+                      target_len: int, *, window_override=None):
+    """Convert a prefill-collected cache (kv len == prefill_len) into a
+    decode cache of ``target_len`` slots per cache_spec: full-attention
+    caches are zero-padded; window caches are re-laid-out into ring order
+    (slot = pos % window).  SSM states pass through unchanged."""
+    cs = cache_spec(cfg, 0, target_len, window_override=window_override)
+    out = {}
+    for key, c in cache.items():
+        if cs[key]["kind"] != "kv":
+            out[key] = c
+            continue
+        tgt = cs[key]["len"]
+        L = c["k"].shape[2]
+
+        def fix(a):
+            if L <= tgt:
+                pad = [(0, 0), (0, 0), (0, tgt - L)] + [(0, 0)] * (a.ndim - 3)
+                return jnp.pad(a, pad)
+            # ring layout: slot j holds the latest position p < prefill_len
+            # with p % tgt == j
+            j = jnp.arange(tgt)
+            p = (prefill_len - 1) - jnp.mod(prefill_len - 1 - j, tgt)
+            return jnp.take(a, p, axis=2)
+
+        out[key] = {"k": fix(c["k"]), "v": fix(c["v"])}
+    return out
+
+
+def decode_step(cfg: ModelConfig, params, adapters, token, cache, pos, *,
+                embeds=None, mrope_positions=None, dist: DistConfig = NO_DIST,
+                lora_scale: float = 1.0, window_override: Optional[int] = None):
+    """One serve step: one new token per sequence.
+
+    token: (B, 1) int (or ``embeds`` (B, 1, d) for stub frontends);
+    pos: scalar int32 — current position.  Returns (logits, new_cache).
+    """
+    if embeds is None:
+        x = common.embed(params["embed"], token)
+    else:
+        x = embeds
+    x = shard_hint(x, dist, "batch", None, None)
+    pos_list = expanded_positions(cfg)
+    cspec = cache_spec(cfg, x.shape[0], 0, window_override=window_override)
+
+    def period_fn(x, per):
+        new_caches = {}
+        for i, spec in pos_list:
+            key = str(i)
+            if spec.kind == "shared_attn":
+                p = params["shared"][key]
+                lora = None if adapters is None else adapters.get("shared", {}).get(key)
+            else:
+                p = per["blocks"][key]
+                lora = None if adapters is None else per["adapters"].get(key)
+            window = spec.window if spec.window is not None else window_override
+            c = per["cache"][key]
+            if cspec[key]["kind"] == "kv" and window is not None:
+                # ring buffer: write slot = pos % window
+                x, nc = _apply_block_decode(
+                    p, cfg, spec.kind, x, lora, lora_scale, spec, c,
+                    pos, window_override=window_override,
+                    mrope_positions=mrope_positions, dist=dist, seq_sharded=False)
+            else:
+                x, nc = _apply_block_decode(
+                    p, cfg, spec.kind, x, lora, lora_scale, spec, c,
+                    pos, window_override=window_override,
+                    mrope_positions=mrope_positions, dist=dist,
+                    seq_sharded=cspec[key].get("seq_sharded", False))
+            new_caches[key] = nc
+        return x, new_caches
+
+    xs = {
+        "blocks": params["blocks"],
+        "adapters": (adapters or {}).get("blocks", {k: {} for k in params["blocks"]}),
+        "cache": cache,
+    }
+    x, new_cache = _scan_periods(period_fn, x, xs, cfg.n_periods)
+    x = _norm(cfg, params["final_norm"], x)
+    logits = logits_from_hidden(cfg, params, x, dist)
+    return logits, new_cache

@@ -1,0 +1,130 @@
+"""Token-dropping top-k MoE with one-hot einsum dispatch (Mesh-TF style).
+
+Dispatch/combine are expressed as einsums over a per-group (B, S, E, C)
+one-hot tensor: with experts sharded over 'model' and the batch over 'data'
+the dispatch tensor is (B/data, S, E/model, C) per chip — tens of MB — and
+the dispatch/combine contractions lower with NO collectives (the expert
+einsum's FSDP weight all-gather is the only communication).  An earlier
+scatter/gather formulation was GSPMD-hostile: XLA replicated the scattered
+(E*C, d) operand in f32 and all-reduced 28 GiB per layer (see EXPERIMENTS.md
+§Perf, kimi hillclimb iteration 0 -> 1).
+
+Capacity is per group (= one sequence): C = ceil(S * top_k * cf / E); tokens
+beyond an expert's capacity are dropped (standard token-dropping semantics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.sharding.hints import NO_DIST, shard_hint
+from repro.utils import cdiv
+
+
+def init_moe(key, cfg, dtype):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s = d ** -0.5
+    return {
+        "router": common.init_linear(kr, d, e, dtype),
+        "gate": (jax.random.normal(kg, (e, d, f)) * s).astype(dtype),
+        "up": (jax.random.normal(ku, (e, d, f)) * s).astype(dtype),
+        "down": (jax.random.normal(kd, (e, f, d)) * (f ** -0.5)).astype(dtype),
+    }
+
+
+def capacity_per_group(seq_len, top_k, n_experts, capacity_factor):
+    c = cdiv(int(seq_len * top_k * max(1.0, capacity_factor)), n_experts)
+    c = int(max(1, c))
+    return cdiv(c, 4) * 4 if c > 4 else c
+
+
+def slot_assignments(top_i, n_experts, capacity):
+    """Per-top-k-slot assignment factors.
+
+    Returns a list of K tuples (ohe, ohc): ohe (B,S,E) expert one-hot already
+    masked by capacity, ohc (B,S,C) position-in-expert one-hot.  The joint
+    (B,S,E,C) dispatch tensor for slot j is the outer product ohe_j x ohc_j —
+    consumers contract it immediately instead of materializing the K-slot sum
+    (keeps the live set to one bf16 joint per slot)."""
+    B, S, K = top_i.shape
+    base = jnp.zeros((B, n_experts), jnp.float32)
+    out = []
+    for j in range(K):
+        oh = jax.nn.one_hot(top_i[:, :, j], n_experts, dtype=jnp.float32)  # (B,S,E)
+        pos = jnp.cumsum(oh, axis=1) - 1 + base[:, None, :]
+        base = base + oh.sum(axis=1)
+        pos_j = jnp.take_along_axis(pos, top_i[:, :, j:j + 1], axis=2)[..., 0]
+        within = (pos_j < capacity).astype(jnp.float32)
+        ohc = jax.nn.one_hot(pos_j.astype(jnp.int32), capacity,
+                             dtype=jnp.float32)                            # (B,S,C)
+        out.append((oh * within[..., None], ohc))
+    return out
+
+
+def dispatch_tensors(top_i, top_w, n_experts, capacity):
+    """Materialized (dispatch, combine) (B,S,E,C) tensors — test/oracle use."""
+    disp = comb = None
+    for j, (ohe, ohc) in enumerate(slot_assignments(top_i, n_experts, capacity)):
+        slot = jnp.einsum("bse,bsc->bsec", ohe, ohc)
+        disp = slot if disp is None else disp + slot
+        w = top_w[:, :, j, None, None]
+        comb = slot * w if comb is None else comb + slot * w
+    return disp, comb
+
+
+def moe_mlp(p, cfg, x, lora=None, lora_scale=1.0, dist=NO_DIST):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity_per_group(S, K, E, cfg.capacity_factor)
+
+    lr = None if (lora is None or "router" not in lora) else lora["router"]
+    logits = common.linear(p["router"], x, lr, lora_scale).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, K)  # (B,S,K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss.
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(top_i[..., 0], E).mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # build bf16 dispatch/combine sums with the experts dim sharded as soon
+    # as each slot joint is produced (one big contraction each — the K slot
+    # outer products are cheap, the (S <-> E*C) contraction is done once).
+    disp = comb = None
+    for j, (ohe, ohc) in enumerate(slot_assignments(top_i, E, C)):
+        joint = jnp.einsum("bse,bsc->bsec", ohe.astype(x.dtype),
+                           ohc.astype(x.dtype))
+        joint = shard_hint(joint, dist, "batch", None, "experts", None)
+        disp = joint if disp is None else disp + joint
+        w = top_w[:, :, j, None, None].astype(x.dtype)
+        comb = joint * w if comb is None else comb + joint * w
+
+    xe = jnp.einsum("bsec,bsd->becd", disp, x)       # (B,E,C,d)
+    if cfg.moe_variant == "fshard":
+        # §Perf hillclimb: never all-gather the (huge) FSDP-sharded expert
+        # weights — keep their f dim sharded over 'data' through the FFN and
+        # replicate the dispatched activations over data instead (xe is
+        # ~100x smaller than the expert weights at kimi scale).  The batch
+        # dim of xe/h/out is replicated for this block; the combine einsum
+        # re-slices it onto 'data'.
+        xe = shard_hint(xe, dist, None, "experts", None, None)
+        h = jnp.einsum("becd,edf->becf", xe, p["gate"])
+        u = jnp.einsum("becd,edf->becf", xe, p["up"])
+        h = jax.nn.silu(h) * u
+        h = shard_hint(h, dist, None, "experts", None, "batch")  # f over data
+        out = jnp.einsum("becf,efd->becd", h, p["down"])
+        out = shard_hint(out, dist, None, "experts", None, None)
+    else:
+        xe = shard_hint(xe, dist, "batch", "experts", None, None)
+        h = jnp.einsum("becd,edf->becf", xe, p["gate"])
+        u = jnp.einsum("becd,edf->becf", xe, p["up"])
+        h = jax.nn.silu(h) * u
+        h = shard_hint(h, dist, "batch", "experts", None, None)
+        out = jnp.einsum("becf,efd->becd", h, p["down"])
+        out = shard_hint(out, dist, "batch", "experts", None, None)
+    y = jnp.einsum("bsec,becd->bsd", comb, out)      # (B,S,d)
+    return y.astype(x.dtype), aux

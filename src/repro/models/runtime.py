@@ -1,0 +1,30 @@
+"""Trace-time mode flags.
+
+``unroll_scans()``: within this context every structural lax.scan (layer
+periods, attention tiles, linear-attention chunks) is traced as unrolled
+straight-line HLO.  Used by the dry-run cost probes: XLA's cost_analysis
+counts a while-loop body ONCE regardless of trip count, so the probes lower
+small unrolled variants (1 and 2 periods) and reconstruct exact totals
+(see launch/dryrun.py).  Execution paths (smoke tests, benches, real
+training) keep the scans.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_UNROLL = False
+
+
+def unroll_enabled() -> bool:
+    return _UNROLL
+
+
+@contextlib.contextmanager
+def unroll_scans(on: bool = True):
+    global _UNROLL
+    old = _UNROLL
+    _UNROLL = on
+    try:
+        yield
+    finally:
+        _UNROLL = old

@@ -1,0 +1,173 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Faithful to arXiv:2404.05892 in the parts that define the architecture class:
+per-channel *data-dependent* decay ``w_t = exp(-exp(w0 + tanh(x_w W_a) W_b))``
+(the low-rank decay MLP is Finch's signature), diagonal bonus ``u``, per-head
+group-norm, receptance gating, and squared-ReLU channel mix.  The
+data-dependent token-shift lerp is simplified to static learned per-channel
+mix vectors (DESIGN.md §5).
+
+State per layer at decode: (x_prev_tm, x_prev_cm, S) with S (B, H, Dk, Dv).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.linear_attention import (chunked_linear_attention,
+                                           linear_attention_step)
+from repro.sharding.hints import NO_DIST, shard_hint
+
+DECAY_RANK = 64
+
+
+def init_rwkv6_block(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    ks = jax.random.split(key, 10)
+    s = d ** -0.5
+    return {
+        "ln1": common.init_layernorm(d, dtype),
+        "ln2": common.init_layernorm(d, dtype),
+        "mix": {n: (jnp.ones((d,), dtype) * 0.5) for n in
+                ("r", "k", "v", "g", "w", "cm_k")},
+        "r": common.init_linear(ks[0], d, d, dtype),
+        "k": common.init_linear(ks[1], d, d, dtype),
+        "v": common.init_linear(ks[2], d, d, dtype),
+        "g": common.init_linear(ks[3], d, d, dtype),
+        "o": common.init_linear(ks[4], d, d, dtype),
+        # data-dependent decay (low-rank MLP) + static base w0
+        "w0": jnp.full((d,), -6.0, dtype),
+        "w_a": (jax.random.normal(ks[5], (d, DECAY_RANK)) * s).astype(dtype),
+        "w_b": (jax.random.normal(ks[6], (DECAY_RANK, d)) * DECAY_RANK ** -0.5).astype(dtype),
+        "u": (jax.random.normal(ks[7], (H, hd)) * 0.1).astype(dtype),
+        "gn_scale": jnp.ones((H, hd), dtype),
+        # channel mix
+        "ffn_k": common.init_linear(ks[8], d, f, dtype),
+        "ffn_v": common.init_linear(ks[9], f, d, dtype),
+    }
+
+
+def _shift(x, x_prev):
+    """x: (B, S, d); x_prev: (B, 1, d) last token of previous segment."""
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _mix(p, x, xs, name):
+    mu = p["mix"][name]
+    return x + (xs - x) * mu
+
+
+def _log_decay(p, xw):
+    raw = p["w0"] + jnp.tanh(xw @ p["w_a"]) @ p["w_b"]
+    return -jnp.exp(raw.astype(jnp.float32))  # (..., d), <= 0
+
+
+def _groupnorm(p, y, eps):
+    # y: (B, S, H, hd) — per-head layer norm
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    return ((yf - mu) * jax.lax.rsqrt(var + eps)).astype(y.dtype) * p["gn_scale"]
+
+
+def rwkv6_block(p, cfg, x, lora, lora_scale, *, state=None, dist=NO_DIST):
+    """Sequence form.  x: (B, S, d).  Returns (x_out, new_state)."""
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+
+    def lget(name):
+        return None if (lora is None or name not in lora) else lora[name]
+
+    if state is None:
+        x_tm_prev = jnp.zeros((B, 1, d), x.dtype)
+        x_cm_prev = jnp.zeros((B, 1, d), x.dtype)
+        S0 = None
+    else:
+        x_tm_prev, x_cm_prev, S0 = state["x_tm"], state["x_cm"], state["S"]
+
+    # ---- time mix ----
+    xn = common.layernorm(p["ln1"], x, cfg.norm_eps)
+    xs = _shift(xn, x_tm_prev)
+    r = common.linear(p["r"], _mix(p, xn, xs, "r"), lget("r"), lora_scale)
+    k = common.linear(p["k"], _mix(p, xn, xs, "k"), lget("k"), lora_scale)
+    v = common.linear(p["v"], _mix(p, xn, xs, "v"), lget("v"), lora_scale)
+    g = common.linear(p["g"], _mix(p, xn, xs, "g"), lget("g"), lora_scale)
+    logw = _log_decay(p, _mix(p, xn, xs, "w"))  # (B, S, d)
+
+    rh = r.reshape(B, S, H, hd)
+    kh = k.reshape(B, S, H, hd)
+    vh = v.reshape(B, S, H, hd)
+    wh = logw.reshape(B, S, H, hd)
+    rh = shard_hint(rh, dist, "batch", None, "heads", None)
+    kh = shard_hint(kh, dist, "batch", None, "heads", None)
+    vh = shard_hint(vh, dist, "batch", None, "heads", None)
+    wh = shard_hint(wh, dist, "batch", None, "heads", None)
+
+    from repro.models import runtime
+    base_chunk = 256 if runtime.unroll_enabled() else 64  # probe-trace speed
+    chunk = min(base_chunk, S) if S % min(base_chunk, S) == 0 else 1
+    y, S_new = chunked_linear_attention(
+        rh, kh, vh, wh, bonus=p["u"], include_current_decay=False,
+        chunk=chunk, state0=S0)
+    y = _groupnorm(p, y, cfg.norm_eps).reshape(B, S, d)
+    y = y * jax.nn.silu(g)
+    x = x + common.linear(p["o"], y, lget("o"), lora_scale)
+
+    # ---- channel mix ----
+    xn2 = common.layernorm(p["ln2"], x, cfg.norm_eps)
+    xs2 = _shift(xn2, x_cm_prev)
+    km = _mix(p, xn2, xs2, "cm_k")
+    h = jnp.square(jax.nn.relu(common.linear(p["ffn_k"], km, lget("ffn_k"), lora_scale)))
+    h = shard_hint(h, dist, "batch", None, "ff")
+    x = x + common.linear(p["ffn_v"], h, lget("ffn_v"), lora_scale)
+
+    new_state = {"x_tm": xn[:, -1:], "x_cm": xn2[:, -1:], "S": S_new}
+    return x, new_state
+
+
+def rwkv6_decode(p, cfg, x, lora, lora_scale, state, dist=NO_DIST):
+    """Single-token form.  x: (B, 1, d)."""
+    B, _, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+
+    def lget(name):
+        return None if (lora is None or name not in lora) else lora[name]
+
+    xn = common.layernorm(p["ln1"], x, cfg.norm_eps)
+    xs = state["x_tm"]
+    r = common.linear(p["r"], _mix(p, xn, xs, "r"), lget("r"), lora_scale)
+    k = common.linear(p["k"], _mix(p, xn, xs, "k"), lget("k"), lora_scale)
+    v = common.linear(p["v"], _mix(p, xn, xs, "v"), lget("v"), lora_scale)
+    g = common.linear(p["g"], _mix(p, xn, xs, "g"), lget("g"), lora_scale)
+    logw = _log_decay(p, _mix(p, xn, xs, "w"))
+
+    y, S_new = linear_attention_step(
+        state["S"],
+        r.reshape(B, H, hd), k.reshape(B, H, hd), v.reshape(B, H, hd),
+        logw.reshape(B, H, hd), bonus=p["u"], include_current_decay=False)
+    y = _groupnorm(p, y[:, None].reshape(B, 1, H, hd), cfg.norm_eps).reshape(B, 1, d)
+    y = y * jax.nn.silu(g)
+    x = x + common.linear(p["o"], y, lget("o"), lora_scale)
+
+    xn2 = common.layernorm(p["ln2"], x, cfg.norm_eps)
+    km = _mix(p, xn2, state["x_cm"], "cm_k")
+    h = jnp.square(jax.nn.relu(common.linear(p["ffn_k"], km, lget("ffn_k"), lora_scale)))
+    x = x + common.linear(p["ffn_v"], h, lget("ffn_v"), lora_scale)
+
+    return x, {"x_tm": xn, "x_cm": xn2, "S": S_new}
+
+
+def init_rwkv6_state(cfg, batch, dtype):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    return {
+        "x_tm": jnp.zeros((batch, 1, d), dtype),
+        "x_cm": jnp.zeros((batch, 1, d), dtype),
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }

@@ -1,0 +1,86 @@
+"""AdamW from scratch (no optax in this environment), with per-leaf learning
+-rate scaling — used for LoRA+ style eta_B = 5 * eta_A (paper §4.1/App. B)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 5e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+def init_state(params):
+    return {
+        "mu": jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), params),
+        "nu": jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def apply_update(cfg: AdamWConfig, params, grads, state, *, lr_tree=None,
+                 update_mask=None):
+    """One AdamW step.
+
+    lr_tree:     optional pytree (same structure) of per-leaf LR multipliers
+                 (LoRA+: 5.0 on every 'b', 1.0 on every 'a').
+    update_mask: optional pytree of {0,1} masks — leaves (or slices of
+                 leaves) with 0 are left untouched, including their moments.
+                 This implements the paper's Eq. 6 Hadamard-mask before the
+                 optimizer so frozen halves / unselected ranks never move.
+    """
+    count = state["count"] + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def leaf(p, g, mu, nu, lr_mult, mask):
+        g = g.astype(jnp.float32)
+        if mask is not None:
+            g = g * mask
+        mu_new = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu_new = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mu_hat = mu_new / c1
+        nu_hat = nu_new / c2
+        step = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        step = cfg.lr * lr_mult * step
+        if mask is not None:
+            step = step * mask
+            mu_new = mu_new * mask + mu * (1 - mask)
+            nu_new = nu_new * mask + nu * (1 - mask)
+        return (p - step.astype(p.dtype)), mu_new, nu_new
+
+    lr_tree = lr_tree if lr_tree is not None else jax.tree.map(lambda _: 1.0, params)
+    if update_mask is None:
+        update_mask = jax.tree.map(lambda _: None, params,
+                                   is_leaf=lambda x: x is None)
+        out = jax.tree.map(lambda p, g, mu, nu, lm: leaf(p, g, mu, nu, lm, None),
+                           params, grads, state["mu"], state["nu"], lr_tree)
+    else:
+        out = jax.tree.map(leaf, params, grads, state["mu"], state["nu"],
+                           lr_tree, update_mask)
+
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}
+
+
+def lora_plus_lr_tree(adapters, b_mult: float = 5.0):
+    """LR multipliers: b_mult on every LoRA 'b' leaf, 1.0 on 'a' (LoRA+,
+    Hayou et al. 2024; paper uses eta_B = 5 eta_A)."""
+    def rec(node, name=None):
+        if isinstance(node, dict):
+            return {k: rec(v, k) for k, v in node.items()}
+        return b_mult if name == "b" else 1.0
+
+    return rec(adapters)

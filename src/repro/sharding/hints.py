@@ -1,0 +1,58 @@
+"""Activation-sharding hints that degrade to no-ops off-mesh.
+
+Model code calls ``shard_hint(x, dist, *logical_axes)`` with logical axis
+names ('batch', 'seq', 'heads', 'ff', 'vocab', None...).  When a
+``DistConfig`` is active (inside a pjit-ed step under a Mesh), the hint
+becomes ``lax.with_sharding_constraint``; otherwise it is the identity, so
+the exact same model code runs in CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    """Logical->mesh axis assignment for one lowering."""
+
+    data: Optional[Tuple[str, ...]] = None   # mesh axes carrying the batch
+    model: Optional[Tuple[str, ...]] = None  # mesh axes carrying model parallel
+    seq: Optional[Tuple[str, ...]] = None    # mesh axes carrying decode-cache seq
+    mesh: object = None                      # jax Mesh (needed for shard_map)
+
+    @property
+    def active(self):
+        return self.mesh is not None
+
+
+NO_DIST = DistConfig()
+
+_LOGICAL = {
+    "batch": "data",
+    "heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "vocab": "model",
+    "cache_seq": "seq",
+}
+
+
+def resolve_axis(dist: DistConfig, logical: Optional[str]):
+    if logical is None:
+        return None
+    kind = _LOGICAL[logical]
+    axes = getattr(dist, kind)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def shard_hint(x, dist: DistConfig = NO_DIST, *logical_axes):
+    if dist is None or not dist.active:
+        return x
+    spec = P(*[resolve_axis(dist, a) for a in logical_axes])
+    return jax.lax.with_sharding_constraint(x, spec)

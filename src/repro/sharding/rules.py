@@ -1,0 +1,124 @@
+"""Path-pattern -> PartitionSpec rules (maxtext-style: the 'data' axis doubles
+as the FSDP axis for weights; 'model' shards heads / ff / experts / vocab).
+
+Conventions (see DESIGN.md §3):
+  * (in, out) projections P(fsdp, 'model'); output-side projections
+    P('model', fsdp) so the contraction dim is model-sharded.
+  * Expert tensors (E, d, f): E over 'model', the ff (or f-contraction) dim
+    over fsdp — this is what makes kimi-k2's 2 TB of bf16 experts fit.
+  * Embedding (V, d): vocab over 'model', d over fsdp.
+  * LoRA adapters + optimizer state: replicated (they are the federated
+    payload and ~0.1% of params; sharding them is a recorded hillclimb).
+  * Norms / biases / small vectors: replicated.
+Stacked block params get a leading None for the period dim.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.model import cache_spec as model_cache_spec
+
+
+def _spec_for(path, leaf, fsdp, model):
+    parts = [p for p in path]
+    name = parts[-1]
+    stacked = parts[0] == "blocks"
+    lead = (None,) if stacked else ()
+
+    def S(*axes):
+        return P(*(lead + axes))
+
+    if parts[0] == "embed":
+        return P(model, fsdp)
+    if parts[0] == "pos_embed":
+        return P(None, None)
+    if parts[0] == "lm_head":
+        return P(fsdp, model) if name == "w" else P(model)
+    if parts[0] == "classifier":
+        return P(None, None) if name == "w" else P(None)
+
+    parent = parts[-2] if len(parts) >= 2 else ""
+    if parent == "mix":  # rwkv token-shift mix vectors (P, d) — replicate
+        return S(None)
+    # --- MoE expert tensors (raw arrays named gate/up/down under 'moe') ---
+    if parent == "moe" and name in ("gate", "up"):
+        return S(model, None, fsdp)
+    if parent == "moe" and name == "down":
+        return S(model, fsdp, None)
+
+    if name == "w":
+        mod = parts[-2]
+        if mod in ("q", "k", "v", "gate", "up", "ffn_k", "r", "g",
+                   "ssm_in", "router"):
+            return S(fsdp, model) if mod != "router" else S(fsdp, None)
+        if mod in ("o", "down", "ffn_v", "ssm_out"):
+            return S(model, fsdp)
+        return S(None, None)
+    if name == "bias":
+        return S(None)
+    if name in ("w_a",):
+        return S(fsdp, None)
+    if name in ("w_b",):
+        return S(None, fsdp)
+    if name in ("u", "gn_scale"):
+        return S(model, None)
+    if name in ("conv_w", "conv_b"):
+        return S(*(None,) * (leaf.ndim - len(lead)))
+    # norms, mix vectors, w0, A_log, dt_bias, D, scalars
+    return S(*(None,) * (leaf.ndim - len(lead)))
+
+
+def param_specs(params, *, fsdp="data", model="model"):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for([_key(k) for k in path], leaf, fsdp, model),
+        params)
+
+
+def adapter_specs(adapters, *, client_stacked=False, pod_axis=None):
+    """Adapters replicate within a pod; with a leading client dim they shard
+    over the pod axis (one client group per pod)."""
+    def one(path, leaf):
+        lead = (pod_axis,) if client_stacked else ()
+        return P(*(lead + (None,) * (leaf.ndim - len(lead))))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: one(path, leaf), adapters)
+
+
+def cache_specs(cfg, cache, *, batch_axes, seq_axes):
+    """Shardings for the decode cache pytree: full-length kv caches shard
+    their seq dim over ``seq_axes``; ring/window caches and ssm states
+    replicate seq (states have none)."""
+    cs = model_cache_spec(cfg, 0, 1 << 62)
+    out = {}
+    for key, c in cache.items():
+        kind = cs[key]["kind"]
+        if kind == "kv":
+            seq = seq_axes if cs[key]["seq_sharded"] else None
+            spec = P(None, batch_axes, seq, None, None)
+            out[key] = {"k": spec, "v": spec}
+        elif kind == "rwkv6":
+            out[key] = {
+                "x_tm": P(None, batch_axes, None, None),
+                "x_cm": P(None, batch_axes, None, None),
+                "S": P(None, batch_axes, "model", None, None),
+            }
+        else:  # mamba2
+            out[key] = {
+                "conv": P(None, batch_axes, None, None),
+                "S": P(None, batch_axes, "model", None, None),
+            }
+    return out
+
+
+def _key(k):
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,88 @@
+"""Small shared utilities: pytree helpers, rng, path flattening."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_weighted_sum(trees, weights):
+    """sum_k w_k * tree_k  (trees: list of pytrees, weights: list of scalars)."""
+    out = tree_scale(trees[0], weights[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = tree_add(out, tree_scale(t, w))
+    return out
+
+
+def tree_dot(a, b):
+    """Global inner product of two pytrees."""
+    leaves = jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return sum(jax.tree.leaves(leaves))
+
+
+def tree_l2(a):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_bytes(tree):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_count(tree):
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def flatten_paths(tree, sep="/"):
+    """{path_string: leaf} for a nested dict/list pytree."""
+    flat = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(prefix + [str(k)], node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(prefix + [str(i)], v)
+        else:
+            flat[sep.join(prefix)] = node
+
+    rec([], tree)
+    return flat
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+def pad_to_multiple(x, multiple, axis):
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad)
+
+
+def cdiv(a, b):
+    return (a + b - 1) // b
+
+
+def round_up(a, b):
+    return cdiv(a, b) * b

@@ -1,0 +1,13 @@
+import jax
+import pytest
+
+# NOTE: never set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device (the dry-run sets it itself; sharding tests
+# that need multiple devices run in a subprocess, see test_sharding.py).
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,100 @@
+"""Integration tests for the federated engine: every method end-to-end on
+the paper's encoder track (tiny scale), plus learning-progress checks."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.federation import FedConfig, run_federated
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_classification
+
+CFG = get_config("roberta-sim")
+
+
+@pytest.fixture(scope="module")
+def data():
+    train, test = make_classification(0, n_classes=8, vocab=CFG.vocab_size,
+                                      seq_len=16, n_train=480, n_test=160)
+    parts = dirichlet_partition(0, train.labels, 4, alpha=0.5)
+    return train, test, parts
+
+
+def _fed(method, **kw):
+    base = dict(method=method, rank=2, global_rank=4, rounds=4,
+                local_epochs=1, batch_size=32, n_clients=4, eval_every=2,
+                seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+@pytest.mark.parametrize("method", ["lora_a2", "fl_lora", "ffa_lora",
+                                    "flexlora", "hetlora", "full_ft"])
+def test_method_runs_end_to_end(method, data):
+    train, test, parts = data
+    kw = {"client_ranks": [1, 2, 2, 4]} if method == "hetlora" else {}
+    hist = run_federated(CFG, _fed(method, **kw), train, test, parts)
+    assert len(hist["acc"]) >= 2
+    assert all(np.isfinite(a) for a in hist["acc"])
+    assert hist["uploaded"][-1] > 0
+
+
+def test_lora_a2_learns(data):
+    train, test, parts = data
+    hist = run_federated(CFG, _fed("lora_a2", rounds=10, local_epochs=2,
+                                   eval_every=5), train, test, parts)
+    assert hist["acc"][-1] > 1.5 / 8  # clearly above chance (12.5%)
+
+
+def test_lora_a2_uploads_less_than_fl_lora(data):
+    """Communication accounting: masked half-uploads < full a+b uploads."""
+    train, test, parts = data
+    h_ours = run_federated(CFG, _fed("lora_a2"), train, test, parts)
+    h_fl = run_federated(CFG, _fed("fl_lora", rank=4), train, test, parts)
+    assert h_ours["uploaded"][-1] < h_fl["uploaded"][-1]
+
+
+def test_alternating_parity_changes_halves(data):
+    """Round parity alternates which half moves (Algorithm 1)."""
+    train, test, parts = data
+    h1 = run_federated(CFG, _fed("lora_a2", rounds=1), train, test, parts)
+    h2 = run_federated(CFG, _fed("lora_a2", rounds=2), train, test, parts)
+    a1 = h1["adapters"]
+    a2 = h2["adapters"]
+    from repro.core import lora
+    # after round 1 (parity B): some b moved; after round 2: some a moved too
+    moved_b = any(float(abs(np.asarray(m["b"])).max()) > 0
+                  for _, m in lora.iter_modules(a1))
+    assert moved_b
+    init = lora.init_adapters(CFG, jax.random.PRNGKey(0), 4)
+    moved_a = any(
+        float(abs(np.asarray(m["a"]) - np.asarray(i["a"])).max()) > 1e-7
+        for (_, m), (_, i) in zip(lora.iter_modules(a2),
+                                  lora.iter_modules(init)))
+    assert moved_a
+
+
+def test_dp_runs_and_degrades_gracefully(data):
+    train, test, parts = data
+    hist = run_federated(CFG, _fed("lora_a2", dp_epsilon=3.0, dp_clip=2.0),
+                         train, test, parts)
+    assert all(np.isfinite(a) for a in hist["acc"])
+
+
+def test_similarity_tracking(data):
+    train, test, parts = data
+    hist = run_federated(CFG, _fed("lora_a2", rounds=2, eval_every=2,
+                                   track_similarity=True),
+                         train, test, parts)
+    M = hist["mask_overlap"][-1]
+    assert M.shape == (4, 4)
+    assert np.allclose(np.diag(M), 1.0, atol=1e-6)
+    C = hist["update_cosine"][-1]
+    assert np.allclose(np.diag(C), 1.0, atol=1e-5)
+
+
+def test_partial_participation(data):
+    train, test, parts = data
+    hist = run_federated(CFG, _fed("lora_a2", participation=0.5),
+                         train, test, parts)
+    assert len(hist["acc"]) >= 2

@@ -1,0 +1,122 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles (ref.py).
+Kernels execute in interpret mode on CPU (the TPU build path is identical
+modulo interpret=False)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mkn_r", [
+    (64, 128, 256, 8), (128, 512, 384, 16), (100, 300, 200, 4),
+    (256, 1024, 512, 1), (32, 96, 64, 32),
+])
+def test_lora_matmul_sweep(mkn_r, dtype):
+    M, K, N, r = mkn_r
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (M, K)).astype(dtype)
+    w = (jax.random.normal(ks[1], (K, N)) * 0.05).astype(dtype)
+    a = (jax.random.normal(ks[2], (K, r)) * 0.05).astype(dtype)
+    b = (jax.random.normal(ks[3], (r, N)) * 0.05).astype(dtype)
+    got = ops.lora_matmul(x, w, a, b, scale=2.0)
+    want = ref.lora_matmul_ref(x, w, a, b, scale=2.0)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_lora_matmul_batched_lead():
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (2, 7, 96))
+    w = jax.random.normal(ks[1], (96, 64)) * 0.1
+    a = jax.random.normal(ks[2], (96, 8)) * 0.1
+    b = jax.random.normal(ks[3], (8, 64)) * 0.1
+    got = ops.lora_matmul(x, w, a, b)
+    want = ref.lora_matmul_ref(x.reshape(-1, 96), w, a, b).reshape(2, 7, 64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("cfg", [
+    # (B, Hq, Hkv, D, S, pos, window, ring)
+    (2, 8, 2, 64, 256, 100, None, False),
+    (1, 4, 4, 32, 1024, 1023, None, False),
+    (2, 16, 2, 64, 512, 511, 128, False),
+    (1, 8, 8, 128, 256, 700, None, True),   # ring buffer, pos > cache len
+    (3, 6, 2, 64, 500, 250, None, False),   # non-block-aligned S (padding)
+])
+def test_decode_attention_sweep(cfg, dtype):
+    B, Hq, Hkv, D, S, pos, window, ring = cfg
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D)).astype(dtype)
+    kc = jax.random.normal(ks[1], (B, S, Hkv, D)).astype(dtype)
+    vc = jax.random.normal(ks[2], (B, S, Hkv, D)).astype(dtype)
+    got = ops.decode_attention(q, kc, vc, jnp.int32(pos), window=window,
+                               ring=ring, block_s=128)
+    want = ref.decode_attention_ref(q, kc, vc, pos, window=window, ring=ring)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_matches_model_path():
+    """Kernel == the model's pure-jnp decode attention (attention.py)."""
+    from repro.models.attention import decode_attention as model_decode
+    ks = jax.random.split(KEY, 3)
+    B, Hq, Hkv, D, S = 2, 8, 4, 64, 256
+    q4 = jax.random.normal(ks[0], (B, 1, Hq, D))
+    kc = jax.random.normal(ks[1], (B, S, Hkv, D))
+    vc = jax.random.normal(ks[2], (B, S, Hkv, D))
+    got = ops.decode_attention(q4, kc, vc, jnp.int32(128), block_s=128)
+    want = model_decode(q4[:, 0][:, None].reshape(B, 1, Hq, D), kc, vc,
+                        jnp.int32(128))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("dims", [(256, 8, 512), (1000, 16, 300),
+                                  (4096, 4, 2048), (128, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rank_importance_sweep(dims, dtype):
+    d_in, r, d_out = dims
+    ks = jax.random.split(KEY, 2)
+    a = jax.random.normal(ks[0], (d_in, r)).astype(dtype)
+    db = jax.random.normal(ks[1], (r, d_out)).astype(dtype)
+    got = ops.rank_importance(a, db)
+    want = ref.rank_importance_ref(a, db)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_rank_importance_stacked():
+    ks = jax.random.split(KEY, 2)
+    a = jax.random.normal(ks[0], (3, 128, 8))
+    db = jax.random.normal(ks[1], (3, 8, 256))
+    got = ops.rank_importance(a, db)
+    want = jax.vmap(ref.rank_importance_ref)(a, db)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4)
+
+
+def test_rank_importance_agrees_with_selection_module():
+    """The kernel computes the same scores selection.importance_scores uses."""
+    from repro.configs.base import get_config
+    from repro.core import lora, selection
+    from repro.utils import tree_sub
+    cfg = get_config("roberta-sim")
+    g = lora.init_adapters(cfg, KEY, 4)
+    c = jax.tree.map(lambda x: x + 0.05, g)
+    delta = tree_sub(c, g)
+    scores = selection.importance_scores(g, delta, parity=1)
+    for path, ab in lora.iter_modules(g):
+        d = selection._get(delta, path)
+        got = ops.rank_importance(ab["a"], d["b"])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(scores[path]),
+                                   rtol=1e-4)
+        break

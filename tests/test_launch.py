@@ -1,0 +1,116 @@
+"""Launch-layer unit tests: input specs, roofline math, HLO collective
+parser, serve generation, checkpoint round-trip of federated state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, get_config
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import parse_collectives
+    hlo = """
+      %ag = bf16[128,256]{1,0} all-gather(%x), replica_groups=[16,16]<=[256]
+      %ar.1 = f32[64]{0} all-reduce(%y), to_apply=%sum
+      %a2a = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(%p, %q)
+      %ags = bf16[4,4]{1,0} all-gather-start(%z)
+      %agd = bf16[4,4]{1,0} all-gather-done(%ags)
+      %cp = u32[10]{0} collective-permute(%w)
+    """
+    out = parse_collectives(hlo)
+    assert out["bytes_by_op"]["all-gather"] == 128 * 256 * 2 + 16 * 2
+    assert out["bytes_by_op"]["all-reduce"] == 64 * 4
+    assert out["bytes_by_op"]["all-to-all"] == 2 * 64 * 4
+    assert out["bytes_by_op"]["collective-permute"] == 40
+    assert out["counts"]["all-gather"] == 2  # -done not double counted
+
+
+def test_params_active_dense_vs_moe():
+    from repro.launch.roofline import params_active
+    tot, act = params_active("llama3-8b")
+    assert tot == act                      # dense: all params active
+    assert 6e9 < tot < 9e9                 # ~8B
+    tot, act = params_active("kimi-k2-1t-a32b")
+    assert 0.8e12 < tot < 1.3e12           # ~1T total
+    assert 2e10 < act < 5e10               # ~32B active
+    assert act < tot / 20
+
+
+def test_model_flops_per_device_shapes():
+    from repro.launch.roofline import CHIPS, model_flops_per_device
+    f_train = model_flops_per_device("llama3-8b", "train_4k", {})
+    f_decode = model_flops_per_device("llama3-8b", "decode_32k", {})
+    # train: 6*N*1M tokens / 256 chips ~ 2e14; decode: 2*N*128 / 256
+    assert 1e14 < f_train < 3e14
+    assert f_decode == pytest.approx(2 * f_train / (6 * 4096 * 2), rel=0.01)
+
+
+def test_serve_generate_greedy_matches_forward_argmax():
+    """The serve loop's first generated token == argmax of the prefill
+    logits of a plain forward (prefill/decode consistency at the driver
+    level)."""
+    from repro.core import lora
+    from repro.launch.serve import generate
+    from repro.models import model as M
+    cfg = get_config("qwen2-7b").reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    adapters = lora.init_adapters(cfg, key, 4)
+    prompts = jax.random.randint(key, (2, 8), 0, cfg.vocab_size)
+    out = generate(cfg, params, adapters, prompts, gen_len=2, rank=4)
+    x, _, _ = M.forward(cfg, params, adapters, tokens=prompts,
+                        lora_scale=lora.lora_scale(4), remat=False)
+    logits = M.logits_from_hidden(cfg, params, x)
+    want_first = jnp.argmax(logits[:, -1], -1)
+    np.testing.assert_array_equal(np.asarray(out[:, 0]),
+                                  np.asarray(want_first))
+
+
+def test_adapters_checkpoint_roundtrip_after_training():
+    from repro.checkpoint import io as ckpt
+    from repro.core.federation import FedConfig, run_federated
+    from repro.data.partition import dirichlet_partition
+    from repro.data.synthetic import make_classification
+    import os, tempfile
+    cfg = get_config("roberta-sim")
+    train, test = make_classification(0, n_classes=4, vocab=cfg.vocab_size,
+                                      seq_len=16, n_train=128, n_test=64)
+    parts = dirichlet_partition(0, train.labels, 2, 0.5)
+    fed = FedConfig(method="lora_a2", rank=2, global_rank=4, rounds=2,
+                    local_epochs=1, batch_size=32, n_clients=2, eval_every=2)
+    hist = run_federated(cfg, fed, train, test, parts)
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "ad.npz")
+        ckpt.save(p, hist["adapters"], metadata={"round": 2})
+        back, meta = ckpt.restore(p)
+    assert meta["round"] == 2
+    assert ckpt.tree_equal(hist["adapters"], back)
+
+
+def test_build_step_input_specs_all_archs():
+    """input-spec construction (ShapeDtypeStructs + shardings) must succeed
+    for every (arch x shape) without touching devices — uses an abstract
+    mesh-like object via a 1-device mesh stand-in is not possible for
+    16x16, so just validate the batch spec helper."""
+    from repro.launch.steps import _batch_specs
+    for arch in ("llama3-8b", "qwen2-vl-7b", "musicgen-medium", "rwkv6-7b"):
+        cfg = get_config(arch)
+        b = _batch_specs(cfg, 8, 128, lead=(2, 3))
+        if cfg.frontend:
+            assert b["embeds"].shape == (2, 3, 8, 128, cfg.d_model)
+        else:
+            assert b["tokens"].shape == (2, 3, 8, 128)
+        if cfg.rope_mode == "mrope":
+            assert b["mrope_positions"].shape == (2, 3, 3, 8, 128)
+        assert b["labels"].shape == (2, 3, 8, 128)
+
+
+def test_reduced_configs_meet_smoke_budget():
+    for arch in ("rwkv6-7b", "qwen2-7b", "dbrx-132b", "kimi-k2-1t-a32b",
+                 "gemma3-12b", "musicgen-medium", "zamba2-2.7b", "llama3-8b",
+                 "qwen2.5-32b", "qwen2-vl-7b"):
+        r = get_config(arch).reduced()
+        assert r.n_layers <= 2 or (r.pattern and r.n_periods == 1)
+        assert r.d_model <= 512
+        assert r.n_experts <= 4

@@ -1,0 +1,178 @@
+"""Unit tests for the paper's core machinery: discordance identities,
+alternating freeze, rank selection, masking, aggregation, DP."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import aggregate, dp, lora, selection
+from repro.utils import tree_sub
+
+CFG = get_config("roberta-sim")
+
+
+def _adapters(seed, rank=8):
+    return lora.init_adapters(CFG, jax.random.PRNGKey(seed), rank)
+
+
+def _perturb(ad, seed, half=None):
+    key = jax.random.PRNGKey(100 + seed)
+    out = jax.tree.map(lambda x: x, ad)
+    for path, ab in lora.iter_modules(out):
+        k1, k2, key = jax.random.split(key, 3)
+        h = selection._get(out, path)
+        if half in (None, "b"):
+            h["b"] = ab["b"] + jax.random.normal(k1, ab["b"].shape) * 0.1
+        if half in (None, "a"):
+            h["a"] = ab["a"] + jax.random.normal(k2, ab["a"].shape) * 0.1
+    return out
+
+
+def _products(ad):
+    return {p: jnp.einsum("...ir,...ro->...io", m["a"], m["b"])
+            for p, m in lora.iter_modules(ad)}
+
+
+def test_discordance_eq2_exists():
+    """Eq. 2: avg(B_k A_k) != avg(B_k) avg(A_k) when both halves move."""
+    g = _adapters(0)
+    c1, c2 = _perturb(g, 1), _perturb(g, 2)
+    avg = aggregate.fedavg(g, [tree_sub(c1, g), tree_sub(c2, g)], [0.5, 0.5])
+    prod_avg = _products(avg)
+    avg_prod = {p: 0.5 * (_products(c1)[p] + _products(c2)[p])
+                for p in prod_avg}
+    diffs = [float(jnp.abs(prod_avg[p] - avg_prod[p]).max()) for p in prod_avg]
+    assert max(diffs) > 1e-4  # discordance is real
+
+
+def test_alternating_freeze_eq3_exact():
+    """Eq. 3: with the frozen half shared, aggregation of the trained half is
+    EXACT: sum_k w_k (a b_k) == a (sum_k w_k b_k)."""
+    g = _adapters(0)
+    c1, c2 = _perturb(g, 1, half="b"), _perturb(g, 2, half="b")
+    w = [0.3, 0.7]
+    masked = [tree_sub(c1, g), tree_sub(c2, g)]
+    new = aggregate.lora_a2(g, masked, w)
+    prod_new = _products(new)
+    prod_clients = [_products(c1), _products(c2)]
+    for p in prod_new:
+        want = w[0] * prod_clients[0][p] + w[1] * prod_clients[1][p]
+        np.testing.assert_allclose(np.asarray(prod_new[p]),
+                                   np.asarray(want), atol=1e-5)
+
+
+def test_importance_matches_frobenius_definition():
+    """Our O(r(d1+d2)) criterion == ||ΔB[:,i] A[i,:]||_F computed naively."""
+    g = _adapters(0, rank=4)
+    c = _perturb(g, 1, half="b")
+    delta = tree_sub(c, g)
+    scores = selection.importance_scores(g, delta, parity=1)
+    for path, ab in lora.iter_modules(g):
+        d = selection._get(delta, path)
+        a, db = np.asarray(ab["a"], np.float64), np.asarray(d["b"], np.float64)
+        s = np.asarray(scores[path])
+        if a.ndim == 3:  # period-stacked: check period 0
+            a, db, s = a[0], db[0], s[0]
+        for i in range(a.shape[-1]):
+            naive = np.linalg.norm(np.outer(a[:, i], db[i, :]))
+            np.testing.assert_allclose(float(s[i]), naive, rtol=1e-4)
+        break  # one module is enough for the identity
+
+
+def test_topk_selection_budget():
+    g = _adapters(0, rank=8)
+    c = _perturb(g, 1, half="b")
+    scores = selection.importance_scores(g, tree_sub(c, g), parity=1)
+    n_mod = lora.n_modules(CFG)
+    budget = 2
+    masks, _ = selection.select_topk(scores, budget, n_mod)
+    total = sum(float(m.sum()) for m in masks.values())
+    assert total == pytest.approx(budget * n_mod, abs=1)  # ties may add 1
+
+
+def test_mask_delta_uploads_only_selected():
+    g = _adapters(0, rank=8)
+    c = _perturb(g, 1)
+    delta = tree_sub(c, g)
+    masks = selection.first_k_masks(g, 3)
+    md = selection.mask_delta(delta, masks, parity=1)
+    for path, ab in lora.iter_modules(md):
+        assert float(jnp.abs(ab["a"]).max()) == 0.0      # frozen half zero
+        assert float(jnp.abs(ab["b"][..., 3:, :]).max()) == 0.0  # unselected
+
+
+def test_adapter_update_masks_parity():
+    g = _adapters(0, rank=4)
+    masks = selection.masks_like(g)
+    for parity, a_on, b_on in [(0, 1.0, 0.0), (1, 0.0, 1.0), (2, 1.0, 1.0)]:
+        upd = selection.adapter_update_masks(g, masks, jnp.int32(parity))
+        for path, ab in lora.iter_modules(upd):
+            assert float(ab["a"].max()) == a_on
+            assert float(ab["b"].max()) == b_on
+
+
+def test_flexlora_svd_reconstructs_rank_r():
+    """FlexLoRA: server SVD of an exactly rank-r aggregate is lossless."""
+    g = _adapters(0, rank=4)
+    c1, c2 = _perturb(g, 1), _perturb(g, 2)
+    new = aggregate.flexlora(g, [c1, c2], [0.5, 0.5], rank=8)
+    prod_new = _products(new)
+    for p in prod_new:
+        want = 0.5 * (_products(c1)[p] + _products(c2)[p])
+        # aggregate of two rank-4 products has rank <= 8 => exact at rank 8
+        np.testing.assert_allclose(np.asarray(prod_new[p]),
+                                   np.asarray(want), atol=2e-4)
+
+
+def test_hetlora_zero_padding():
+    g = _adapters(0, rank=8)
+    masks = selection.first_k_masks(g, 2)
+    c = _perturb(g, 1, half="b")
+    delta = selection.mask_delta(tree_sub(c, g), masks, parity=1)
+    new = aggregate.hetlora(g, [delta], [1.0], client_ranks=[2])
+    for path, ab in lora.iter_modules(new):
+        base = selection._get(g, path)
+        # ranks >= 2 of b unchanged up to the global decay on tail ranks
+        np.testing.assert_allclose(np.asarray(ab["b"][..., 2:, :]),
+                                   np.asarray(base["b"][..., 2:, :]) * 1.0,
+                                   atol=1e-6)
+
+
+def test_dp_clip_and_noise():
+    g = _adapters(0, rank=4)
+    c = _perturb(g, 1)
+    delta = tree_sub(c, g)
+    clipped = dp.clip_tree(delta, 0.5)
+    from repro.utils import tree_l2
+    assert float(tree_l2(clipped)) <= 0.5 + 1e-5
+    noisy = dp.privatize(delta, jax.random.PRNGKey(0), epsilon=1.0, clip_norm=0.5)
+    d = sum(float(jnp.abs(x - y).sum()) for x, y in
+            zip(jax.tree.leaves(noisy), jax.tree.leaves(clipped)))
+    assert d > 0.0  # noise present
+
+
+def test_uploaded_param_accounting():
+    """Paper Table 1 col 8: upload = selected ranks x active-half rows."""
+    g = _adapters(0, rank=8)
+    masks = selection.first_k_masks(g, 2)
+    n = selection.selected_upload_count(masks, g, parity=1)
+    manual = 0
+    for path, ab in lora.iter_modules(g):
+        lead = int(np.prod(ab["a"].shape[:-2])) if ab["a"].ndim > 2 else 1
+        manual += lead * 2 * ab["b"].shape[-1]
+    assert n == pytest.approx(manual)
+
+
+def test_merge_adapters_equals_unmerged_forward(rng):
+    from repro.models import model as M
+    cfg = CFG
+    params = M.init_params(cfg, rng)
+    adapters = _perturb(lora.init_adapters(cfg, rng, 4), 3)
+    tokens = jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)
+    scale = lora.lora_scale(4)
+    logits_unmerged = M.classify(cfg, params, adapters, tokens, lora_scale=scale)
+    merged = lora.merge_adapters(cfg, params, adapters, 4)
+    logits_merged = M.classify(cfg, merged, None, tokens)
+    np.testing.assert_allclose(np.asarray(logits_unmerged),
+                               np.asarray(logits_merged), atol=2e-3)

@@ -1,0 +1,117 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dp, selection
+from repro.data.partition import dirichlet_partition, pathological_partition
+from repro.models import moe
+from repro.models.linear_attention import (chunked_linear_attention,
+                                           reference_scan)
+from repro.utils import tree_l2
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(2, 40), st.integers(2, 8),
+       st.floats(0.01, 5.0), st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_dirichlet_partition_is_a_partition(n_clients, n_classes, alpha, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, n_classes, size=400)
+    parts = dirichlet_partition(seed, labels, n_clients, alpha)
+    allidx = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(allidx, np.arange(400))  # exact cover
+    assert all(len(p) >= 1 for p in parts)                 # min_size
+
+
+@given(st.integers(1, 10))
+@settings(**SETTINGS)
+def test_pathological_pairs_share_classes(k)  :
+    n_clients = 2 * k
+    n_classes = n_clients
+    labels = np.repeat(np.arange(n_classes), 20)
+    parts = pathological_partition(labels, n_clients)
+    for pair in range(k):
+        c1 = set(labels[parts[2 * pair]])
+        c2 = set(labels[parts[2 * pair + 1]])
+        assert c1 == c2 == {2 * pair, 2 * pair + 1}
+
+
+@given(st.integers(0, 1000), st.floats(0.05, 10.0))
+@settings(**SETTINGS)
+def test_dp_clip_bounds_norm(seed, clip):
+    key = jax.random.PRNGKey(seed)
+    tree = {"a": jax.random.normal(key, (7, 5)) * 3,
+            "b": {"c": jax.random.normal(key, (11,))}}
+    clipped = dp.clip_tree(tree, clip)
+    assert float(tree_l2(clipped)) <= clip * (1 + 1e-5)
+
+
+@given(st.integers(1, 6), st.integers(2, 32), st.integers(1, 4),
+       st.integers(0, 100))
+@settings(**SETTINGS)
+def test_topk_budget_invariant(budget, n_entries, n_mods, seed):
+    key = jax.random.PRNGKey(seed)
+    scores = {("blocks", str(i), "q"):
+              jax.random.uniform(jax.random.fold_in(key, i), (n_entries,))
+              for i in range(n_mods)}
+    k = min(budget * n_mods, n_entries * n_mods)
+    masks, _ = selection.select_topk(scores, budget, n_mods)
+    total = sum(float(m.sum()) for m in masks.values())
+    assert total >= k  # ties can only add
+    assert total <= n_entries * n_mods
+
+
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(4, 16),
+       st.integers(0, 50))
+@settings(**SETTINGS)
+def test_moe_dispatch_never_overflows_capacity(E, K, S, seed):
+    key = jax.random.PRNGKey(seed)
+    K = min(K, E)
+    top_i = jax.random.randint(key, (2, S, K), 0, E)
+    top_w = jax.nn.softmax(jax.random.normal(key, (2, S, K)), -1)
+    C = moe.capacity_per_group(S, K, E, 1.0)
+    disp, comb = moe.dispatch_tensors(top_i, top_w, E, C)
+    # each (group, expert, slot) used at most once
+    assert float(disp.sum(1).max()) <= 1.0 + 1e-6
+    # combine weight of a token never exceeds its router mass
+    assert float(comb.sum((2, 3)).max()) <= 1.0 + 1e-5
+
+
+@given(st.integers(0, 50), st.sampled_from([1, 2, 4, 8]),
+       st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_linear_attention_chunk_invariance(seed, chunk, icd):
+    """Chunk size must never change the math."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    B, T, H, Dk, Dv = 1, 8, 2, 3, 3
+    q = jax.random.normal(ks[0], (B, T, H, Dk))
+    k = jax.random.normal(ks[1], (B, T, H, Dk))
+    v = jax.random.normal(ks[2], (B, T, H, Dv))
+    logw = -jnp.abs(jax.random.normal(ks[3], (B, T, H, Dk)))
+    y, S = chunked_linear_attention(q, k, v, logw, chunk=chunk,
+                                    include_current_decay=icd,
+                                    bonus=None if icd else jnp.ones((H, Dk)))
+    y0, S0 = reference_scan(q, k, v, logw, include_current_decay=icd,
+                            bonus=None if icd else jnp.ones((H, Dk)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y0), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S0), atol=1e-4)
+
+
+@given(st.integers(0, 30))
+@settings(max_examples=10, deadline=None)
+def test_lora_matmul_kernel_property(seed):
+    from repro.kernels import ops, ref
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    M, K, N, r = 32, 64, 48, 4
+    x = jax.random.normal(ks[0], (M, K))
+    w = jax.random.normal(ks[1], (K, N)) * 0.1
+    a = jax.random.normal(ks[2], (K, r)) * 0.1
+    b = jax.random.normal(ks[3], (r, N)) * 0.1
+    got = ops.lora_matmul(x, w, a, b, scale=1.5)
+    want = ref.lora_matmul_ref(x, w, a, b, scale=1.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)

@@ -1,0 +1,142 @@
+"""Sharding/distribution tests.  These need >1 device, so they run a child
+python with --xla_force_host_platform_device_count=8 (the main test process
+must keep seeing 1 device — see conftest.py)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code, devices=8):
+    env = dict(os.environ,
+               PYTHONPATH=SRC,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-4000:]}"
+    return r.stdout
+
+
+def test_federated_train_step_sharded_matches_unsharded():
+    """One federated round on a 2x2x2 (pod,data,model) mesh == the same
+    round computed without any mesh: aggregation over the pod axis is exact."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs.base import get_config, InputShape
+        from repro.launch.steps import build_step
+        from repro.models import model as M
+        from repro.core import lora
+        cfg = get_config('llama3-8b').reduced()
+        mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2,2,2),
+                    ('pod','data','model'))
+        shape = InputShape('t','train', 32, 8)  # seq 32, global batch 8
+        b = build_step(cfg, shape, mesh, multi_pod=True, local_steps=2,
+                       micro_batch=2, adapter_rank=4)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        adapters = lora.init_adapters(cfg, jax.random.PRNGKey(1), 4)
+        K, steps = 2, 2
+        key = jax.random.PRNGKey(2)
+        batch = {'tokens': jax.random.randint(key, (K, steps, 2, 32), 0, cfg.vocab_size)}
+        batch['labels'] = batch['tokens']
+        masks = {p: jnp.ones((K,) + ab['a'].shape[:-2] + (4,))
+                 for p, ab in lora.iter_modules(adapters)}
+        weights = jnp.array([0.25, 0.75])
+        parity = jnp.int32(1)
+        args = (params, adapters, batch, parity, masks, weights)
+        # sharded
+        j = jax.jit(b.step_fn, in_shardings=b.in_shardings,
+                    out_shardings=b.out_shardings)
+        with mesh:
+            out_sh, loss_sh = j(*args)
+        # unsharded reference (same math, no mesh)
+        from repro.launch.steps import make_federated_train_step
+        from repro.sharding.hints import NO_DIST
+        ref_step = make_federated_train_step(cfg, dist=NO_DIST, adapter_rank=4)
+        out_ref, loss_ref = ref_step(*args)
+        for (pa, xa), (pb, xb) in zip(
+                sorted(jax.tree_util.tree_leaves_with_path(out_sh), key=str),
+                sorted(jax.tree_util.tree_leaves_with_path(out_ref), key=str)):
+            np.testing.assert_allclose(np.asarray(xa), np.asarray(xb),
+                                       atol=5e-4, err_msg=str(pa))
+        np.testing.assert_allclose(float(loss_sh), float(loss_ref), atol=1e-4)
+        print('OK train', float(loss_sh))
+    """)
+
+
+def test_decode_step_seq_sharded_cache_matches_unsharded():
+    """Flash-decoding with the cache sharded over the model axis (shard_map
+    log-sum-exp merge) == single-device decode."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs.base import get_config, InputShape
+        from repro.launch.steps import build_step
+        from repro.models import model as M
+        from repro.core import lora
+        cfg = get_config('qwen2-7b').reduced()
+        mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2,4),
+                    ('data','model'))
+        shape = InputShape('d','decode', 64, 4)  # cache 64, batch 4
+        b = build_step(cfg, shape, mesh, adapter_rank=4)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        adapters = lora.init_adapters(cfg, jax.random.PRNGKey(1), 4)
+        key = jax.random.PRNGKey(2)
+        cache = M.init_cache(cfg, 4, 64)
+        # warm the cache with random history
+        cache = jax.tree.map(
+            lambda a: jax.random.normal(key, a.shape, a.dtype) * 0.1
+            if a.ndim == 5 else a, cache)
+        tok = jax.random.randint(key, (4, 1), 0, cfg.vocab_size)
+        pos = jnp.int32(40)
+        batch = {'tokens': tok}
+        ref_logits, _ = M.decode_step(cfg, params, adapters, tok,
+                                      jax.tree.map(lambda x: x, cache), pos,
+                                      lora_scale=lora.lora_scale(4))
+        j = jax.jit(b.step_fn, in_shardings=b.in_shardings,
+                    out_shardings=b.out_shardings)
+        with mesh:
+            logits, _ = j(params, adapters, batch,
+                          jax.tree.map(lambda x: x, cache), pos)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                                   atol=5e-4)
+        print('OK decode')
+    """)
+
+
+def test_production_mesh_shapes():
+    _run("""
+        import jax
+        from repro.launch.mesh import make_production_mesh
+        m1 = make_production_mesh()
+        assert dict(m1.shape) == {'data': 16, 'model': 16}, m1.shape
+        m2 = make_production_mesh(multi_pod=True)
+        assert dict(m2.shape) == {'pod': 2, 'data': 16, 'model': 16}
+        print('OK mesh')
+    """, devices=512)
+
+
+def test_param_specs_cover_all_leaves():
+    """Every param leaf of every assigned arch gets a rank-matching spec."""
+    import jax
+    from repro.configs.base import get_config
+    from repro.models import model as M
+    from repro.sharding import rules
+    import functools
+    for arch in ["llama3-8b", "kimi-k2-1t-a32b", "rwkv6-7b", "zamba2-2.7b",
+                 "gemma3-12b", "qwen2-vl-7b", "musicgen-medium"]:
+        cfg = get_config(arch)
+        sds = jax.eval_shape(functools.partial(M.init_params, cfg),
+                             jax.random.PRNGKey(0))
+        specs = rules.param_specs(sds)
+        flat_p = jax.tree_util.tree_leaves_with_path(sds)
+        flat_s = jax.tree_util.tree_leaves_with_path(
+            specs, is_leaf=lambda x: hasattr(x, "_normalized_spec_for_aval"))
+        assert len(flat_p) == len(flat_s)
+        for (pp, leaf), (ps, spec) in zip(sorted(flat_p, key=str),
+                                          sorted(flat_s, key=str)):
+            assert len(spec) <= leaf.ndim, (arch, pp, spec, leaf.shape)

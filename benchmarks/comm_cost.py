@@ -6,12 +6,18 @@ This is exact arithmetic (no training): upload per client per round is
   full-FT:  all params
   FL+LoRA/FlexLoRA: r * (d_in + d_out) per module (both halves)
   FFA-LoRA: r * d_out (B half only)
-  LoRA-A²:  selected r_i ranks x active-half dim (+ rank indices)
+  LoRA-A²:  selected r_i ranks x active-half dim + rank indices (one uint32
+            per selected rank slot = one fp32-parameter-equivalent)
+
+The LoRA-A² closed form is cross-checked against the *measured* payload of
+repro.comm.codec on the smallest arch: the codec's data+index sections for
+the lossless fp32 codec must equal 4 bytes x the closed form exactly.
 
 Validates: ours < FL+LoRA at equal budget; rank-1 LoRA-A² on RoBERTa-base
 uploads <0.2% of full fine-tuning (paper's 99.8% reduction claim).
 """
 import jax
+import numpy as np
 
 from benchmarks.common import save
 from repro.configs.base import get_config
@@ -36,12 +42,49 @@ def upload_per_round(cfg, method, rank):
     if method == "ffa_lora":
         return half_out
     if method == "lora_a2":  # alternating halves; average the two parities
-        return (half_in + half_out) / 2
+        # + rank indices: r_i * N selected slots per round, one uint32 each
+        # (4 bytes == one fp32 parameter-equivalent)
+        return (half_in + half_out) / 2 + rank * lora.n_modules(cfg)
     raise ValueError(method)
 
 
+def measured_lora_a2_bytes(cfg, rank):
+    """Measured wire bytes (data + index sections, parity-averaged) of a
+    LoRA-A² upload through repro.comm.codec with first-k rank masks."""
+    from repro.comm import codec
+    from repro.core import selection
+
+    adapters = lora.init_adapters(cfg, jax.random.PRNGKey(0),
+                                  max(rank, 2) * 2)
+    masks = selection.first_k_masks(adapters, rank)
+    out = 0.0
+    for parity in (0, 1):
+        delta = jax.tree.map(np.zeros_like, adapters)
+        stats = codec.payload_stats(codec.encode(delta, masks, parity))
+        out += (stats.data_bytes + stats.index_bytes) / 2
+    return out
+
+
+def crosscheck(arch="roberta-base", rank=8):
+    """Assert the closed form == measured codec payload for fp32.
+
+    The closed form is stated at the paper's budget (global rank == r_i, so
+    first-k masks select every slot); measured uses the same masks."""
+    cfg = get_config(arch)
+    spec = lora.lora_spec(cfg)
+    half_in = sum((1 if g == "shared" else cfg.n_periods) * rank * di
+                  for (g, _, _), (di, _) in spec.items())
+    half_out = sum((1 if g == "shared" else cfg.n_periods) * rank * do
+                   for (g, _, _), (_, do) in spec.items())
+    closed = (half_in + half_out) / 2 + rank * lora.n_modules(cfg)
+    measured = measured_lora_a2_bytes(cfg, rank)
+    assert measured == 4 * closed, (measured, 4 * closed)
+    return {"arch": arch, "rank": rank, "closed_form_params": closed,
+            "measured_bytes": measured, "match": True}
+
+
 def main(quick=False):
-    rows = []
+    rows = [crosscheck("distilbert" if quick else "roberta-base", rank=4)]
     archs = ["roberta-base"] if quick else ARCHS
     for arch in archs:
         cfg = get_config(arch)
@@ -64,6 +107,10 @@ def main(quick=False):
                 rows.append(row)
     save("comm_cost", rows)
     for r in rows:
+        if "match" in r:
+            print(f"comm/crosscheck_{r['arch']}_r{r['rank']},0,"
+                  f"measured={r['measured_bytes']:.0f}B;match={r['match']}")
+            continue
         frac = r.get("fraction_of_full")
         print(f"comm/{r['arch']}_{r['method']}_r{r['rank']},0,"
               f"total={r['total_50r_30c']:.3e}"

@@ -13,7 +13,8 @@ import sys
 import time
 import traceback
 
-from benchmarks import (comm_cost, fig3_rank_selection, fig6_alternating,
+from benchmarks import (async_stragglers, codec_accuracy, comm_cost,
+                        fig3_rank_selection, fig6_alternating,
                         fig8_convergence, fig10_client_drift,
                         table1_main_grid, table2_model_scale, table4_dp,
                         table7_pathologic, table8_resource_het,
@@ -31,6 +32,8 @@ TABLES = {
     "fig8": fig8_convergence.main,
     "fig10": fig10_client_drift.main,
     "comm": comm_cost.main,
+    "codec": codec_accuracy.main,
+    "async": async_stragglers.main,
 }
 
 

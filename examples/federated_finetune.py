@@ -13,6 +13,7 @@ import time
 import numpy as np
 
 from repro.checkpoint import io as ckpt
+from repro.comm import network
 from repro.configs.base import get_config
 from repro.core.federation import FedConfig, run_federated
 from repro.data.partition import dirichlet_partition
@@ -27,6 +28,12 @@ def main():
     ap.add_argument("--clients", type=int, default=6)
     ap.add_argument("--alpha", type=float, default=0.1)
     ap.add_argument("--rank", type=int, default=2)
+    ap.add_argument("--codec", default="fp32", choices=["fp32", "bf16", "int8"],
+                    help="uplink element codec (see repro.comm.codec)")
+    ap.add_argument("--server", default="sync", choices=["sync", "async"],
+                    help="async = FedBuff-style buffered aggregation")
+    ap.add_argument("--stragglers", action="store_true",
+                    help="heterogeneous fleet: 25%% of clients 8x slower")
     ap.add_argument("--out", default="artifacts/federated_adapters.npz")
     args = ap.parse_args()
 
@@ -46,14 +53,21 @@ def main():
     print(f"model={cfg.name}  clients={args.clients}  "
           f"|D_k| min/max = {min(sizes)}/{max(sizes)}")
 
+    fleet = (network.heterogeneous_fleet(args.clients, seed=0)
+             if args.stragglers else None)
     fed = FedConfig(method="lora_a2", rank=args.rank, global_rank=8,
                     rounds=rounds, local_epochs=2, batch_size=16,
-                    n_clients=args.clients, eval_every=max(1, rounds // 4))
+                    n_clients=args.clients, eval_every=max(1, rounds // 4),
+                    codec=args.codec, server_mode=args.server, network=fleet)
     t0 = time.time()
     hist = run_federated(cfg, fed, train, test, parts)
-    for r, acc, up in zip(hist["round"], hist["acc"], hist["uploaded"]):
-        print(f"round {r:3d}  acc {acc:.4f}  uploaded {up:.3e}")
-    print(f"wall: {time.time()-t0:.1f}s")
+    for r, acc, up, st in zip(hist["round"], hist["acc"], hist["uploaded"],
+                              hist["sim_time"]):
+        print(f"round {r:3d}  acc {acc:.4f}  uploaded {up/1e6:.3f} MB"
+              f"  sim_t {st:.2f}s")
+    print(f"wall: {time.time()-t0:.1f}s  "
+          f"downlink {hist['downloaded_cum']/1e6:.1f} MB  codec={args.codec}"
+          f"  server={args.server}")
 
     ckpt.save(args.out, hist["adapters"], metadata={"rounds": rounds,
                                                     "arch": cfg.name})

@@ -26,4 +26,4 @@ for method in ("lora_a2", "fl_lora"):
                     local_epochs=2, batch_size=32, n_clients=4, eval_every=4)
     hist = run_federated(cfg, fed, train, test, clients)
     print(f"{method:8s}  acc={hist['acc'][-1]:.3f}  "
-          f"uploaded={hist['uploaded'][-1]:.2e} params")
+          f"uploaded={hist['uploaded'][-1]:.2e} bytes on the wire")

@@ -13,15 +13,26 @@ import os
 import jax
 import numpy as np
 
+try:
+    import ml_dtypes
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - ml_dtypes ships with jax here
+    _BF16 = None
+
 SEP = "::"
+_META_KEY = "__meta__"
+_DTYPES_KEY = "__dtypes__"
 
 
-def save(path, tree, metadata=None):
+def flatten_tree(tree):
+    """{path_key: np.ndarray leaf} using the repo's canonical path scheme:
+    dict keys joined with SEP, list/tuple indices as '#i'.  Shared by the
+    checkpoint writer and the comm dense codec — change it in one place."""
     flat = {}
 
     def rec(prefix, node):
         if isinstance(node, dict):
-            for k in node:
+            for k in sorted(node):
                 rec(prefix + [str(k)], node[k])
         elif isinstance(node, (list, tuple)):
             for i, v in enumerate(node):
@@ -30,25 +41,43 @@ def save(path, tree, metadata=None):
             flat[SEP.join(prefix)] = np.asarray(node)
 
     rec([], tree)
+    return flat
+
+
+def save(path, tree, metadata=None):
+    flat = flatten_tree(tree)
+    # leaves npz stores as raw void (bf16): path -> dtype name
+    dtypes = {k: "bfloat16" for k, x in flat.items()
+              if _BF16 is not None and x.dtype == _BF16}
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    meta = json.dumps(metadata or {})
-    np.savez(path, __meta__=np.frombuffer(meta.encode(), np.uint8), **flat)
+    meta = json.dumps({_DTYPES_KEY: dtypes, "user": metadata or {}})
+    np.savez(path, **{_META_KEY: np.frombuffer(meta.encode(), np.uint8)},
+             **flat)
 
 
 def restore(path):
-    """Returns (tree, metadata).  List nodes come back as lists."""
+    """Returns (tree, metadata).  List nodes come back as lists; bf16 leaves
+    (stored by npz as raw 2-byte void) are viewed back to bfloat16."""
     z = np.load(path if path.endswith(".npz") else path + ".npz")
-    meta = {}
+    meta, dtypes = {}, {}
     tree = {}
+    if _META_KEY in z.files:
+        raw = json.loads(bytes(z[_META_KEY]).decode())
+        if _DTYPES_KEY in raw:  # current format: {dtypes, user}
+            dtypes, meta = raw[_DTYPES_KEY], raw["user"]
+        else:                   # pre-dtype checkpoints
+            meta = raw
     for key in z.files:
-        if key == "__meta__":
-            meta = json.loads(bytes(z[key]).decode())
+        if key == _META_KEY:
             continue
+        leaf = z[key]
+        if key in dtypes:
+            leaf = leaf.view(np.dtype(dtypes[key]))
         parts = key.split(SEP)
         node = tree
         for p in parts[:-1]:
             node = node.setdefault(p, {})
-        node[parts[-1]] = z[key]
+        node[parts[-1]] = leaf
     return _listify(tree), meta
 
 

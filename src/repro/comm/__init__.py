@@ -1,0 +1,16 @@
+"""repro.comm — the communication subsystem for the federated loop.
+
+Three layers (see README "repro.comm" section):
+
+  codec.py    wire-format codecs: rank-sparse packing of masked adapter
+              deltas with pluggable element codecs (fp32 / bf16 / int8)
+  network.py  simulated per-client links (bandwidth / latency / dropout)
+              and the round clock
+  server.py   server endpoints: synchronous round server and a
+              FedBuff-style async buffered server
+
+Every client→server and server→client exchange in core/federation.py is
+routed through these layers, so `history["uploaded"]` is measured wire
+bytes, not an analytic estimate.
+"""
+from repro.comm import codec, network, server  # noqa: F401

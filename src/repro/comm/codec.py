@@ -1,0 +1,267 @@
+"""Wire-format codecs: pack a masked adapter delta into actual bytes.
+
+Payload layout (versioned, little-endian):
+
+    magic   b"RCW1"
+    u32     header length H
+    H bytes JSON header {v, codec, halves, modules: [...]}
+    body    per module, in header order:
+              [u32 idx[nsel]]          rank-slot indices (absent when dense)
+              [f32 scales[...]]        int8 codec only, one per slot per half
+              data                     selected columns of 'a' and/or rows
+                                       of 'b', element-coded
+
+A "rank slot" is one (period, rank) pair of a module — the unit the
+selection masks address (see core/selection.py).  Only selected slots
+travel: for half 'a' the column a[..., :, i] (d_in elements), for half
+'b' the row b[..., i, :] (d_out elements).  Module paths reuse the
+``::``-joined path-flattening scheme from checkpoint/io.py.
+
+Element codecs:
+    fp32    raw float32; bit-exact round-trip for float32 inputs
+    bf16    bfloat16 bit pattern (2 bytes/elem); bit-exact for bf16 inputs
+    int8    stochastic rounding with one fp32 scale per rank slot per half
+
+``encode_dense``/``decode_dense`` handle arbitrary pytrees (the full-FT
+baseline uploads whole parameter trees, not rank-structured adapters).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+
+import numpy as np
+
+from repro.checkpoint.io import SEP
+from repro.core.lora import iter_modules
+
+try:
+    import ml_dtypes
+    BF16 = np.dtype(ml_dtypes.bfloat16)
+except ImportError:  # pragma: no cover - ml_dtypes ships with jax here
+    BF16 = None
+
+MAGIC = b"RCW1"
+ELEMENT_CODECS = ("fp32", "bf16", "int8")
+ELEMENT_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
+INDEX_BYTES = 4   # one uint32 per selected rank slot
+SCALE_BYTES = 4   # one fp32 scale per selected slot per half (int8 only)
+PARITY_HALVES = {0: "a", 1: "b", 2: "ab"}
+
+
+@dataclasses.dataclass(frozen=True)
+class PayloadStats:
+    """Byte accounting for one payload, split by wire section."""
+    total_bytes: int
+    header_bytes: int    # magic + length word + JSON header
+    index_bytes: int     # rank-slot index lists
+    scale_bytes: int     # int8 per-slot scales
+    data_bytes: int      # element payload
+    n_selected: int      # selected rank slots across all modules
+    n_elements: int      # adapter elements on the wire
+
+
+def _check_codec(codec):
+    if codec not in ELEMENT_CODECS:
+        raise ValueError(f"unknown codec {codec!r}; want one of {ELEMENT_CODECS}")
+
+
+# ---------------------------------------------------------------------------
+# element codecs
+# ---------------------------------------------------------------------------
+
+
+def _encode_rows(rows, codec, rng):
+    """rows: (nsel, dim) float array -> (scale_bytes, data_bytes)."""
+    if codec == "fp32":
+        return b"", np.ascontiguousarray(rows, np.float32).tobytes()
+    if codec == "bf16":
+        return b"", np.ascontiguousarray(rows).astype(BF16).tobytes()
+    x = np.asarray(rows, np.float32)
+    amax = np.abs(x).max(axis=1) if x.size else np.zeros((0,), np.float32)
+    scale = (amax / 127.0).astype(np.float32)
+    safe = np.where(scale > 0, scale, 1.0)[:, None]
+    q = np.floor(x / safe + rng.random(x.shape, np.float32))
+    q = np.clip(q, -127, 127).astype(np.int8)
+    return scale.tobytes(), q.tobytes()
+
+
+def _decode_rows(body, off, nsel, dim, codec):
+    """-> (rows float32 (nsel, dim), new offset)."""
+    if codec == "int8":
+        scale = np.frombuffer(body, np.float32, nsel, off)
+        off += nsel * SCALE_BYTES
+        q = np.frombuffer(body, np.int8, nsel * dim, off).reshape(nsel, dim)
+        off += nsel * dim
+        return q.astype(np.float32) * scale[:, None], off
+    if codec == "bf16":
+        raw = np.frombuffer(body, np.uint16, nsel * dim, off)
+        off += nsel * dim * 2
+        return raw.view(BF16).reshape(nsel, dim).astype(np.float32), off
+    rows = np.frombuffer(body, np.float32, nsel * dim, off).reshape(nsel, dim)
+    return rows, off + nsel * dim * 4
+
+
+# ---------------------------------------------------------------------------
+# rank-sparse adapter payloads
+# ---------------------------------------------------------------------------
+
+
+def encode(delta, masks, parity, codec="fp32", seed=0):
+    """Pack a (masked) adapter delta into wire bytes.
+
+    masks: {path_tuple: 0/1 rank mask shaped lead+(r,)} as produced by
+    core/selection.py.  parity selects which halves travel (0 -> 'a',
+    1 -> 'b', 2 -> both).  seed drives int8 stochastic rounding.
+    """
+    _check_codec(codec)
+    halves = PARITY_HALVES[parity]
+    rng = np.random.default_rng(seed)
+    mods, body = [], []
+    for path, ab in iter_modules(delta):
+        a, b = np.asarray(ab["a"]), np.asarray(ab["b"])
+        lead = a.shape[:-2]
+        d_in, r = a.shape[-2], a.shape[-1]
+        d_out = b.shape[-1]
+        n_slots = int(np.prod(lead, dtype=np.int64)) * r if lead else r
+        L = n_slots // r
+        m = np.asarray(masks[path], np.float32).reshape(n_slots)
+        idx = np.nonzero(m > 0)[0].astype(np.uint32)
+        dense = idx.size == n_slots
+        mods.append({"p": SEP.join(path), "lead": list(lead), "din": d_in,
+                     "r": r, "dout": d_out, "nsel": int(idx.size),
+                     "dense": dense, "dt": a.dtype.name})
+        if not dense:
+            body.append(idx.tobytes())
+        sel = slice(None) if dense else idx
+        if "a" in halves:
+            cols = a.reshape(L, d_in, r).transpose(0, 2, 1).reshape(n_slots, d_in)
+            s, d = _encode_rows(cols[sel], codec, rng)
+            body += [s, d]
+        if "b" in halves:
+            rows = b.reshape(L, r, d_out).reshape(n_slots, d_out)
+            s, d = _encode_rows(rows[sel], codec, rng)
+            body += [s, d]
+    header = json.dumps({"v": 1, "codec": codec, "halves": halves,
+                         "modules": mods}, separators=(",", ":")).encode()
+    return MAGIC + struct.pack("<I", len(header)) + header + b"".join(body)
+
+
+def _parse_header(payload):
+    if payload[:4] != MAGIC:
+        raise ValueError("not a repro.comm payload (bad magic)")
+    hlen = struct.unpack_from("<I", payload, 4)[0]
+    header = json.loads(payload[8:8 + hlen].decode())
+    return header, payload[8 + hlen:]
+
+
+def decode(payload):
+    """Unpack wire bytes into a dense adapter-delta pytree (unselected rank
+    slots are exactly zero).  Inverse of encode for lossless codecs."""
+    header, body = _parse_header(payload)
+    codec, halves = header["codec"], header["halves"]
+    tree, off = {}, 0
+    for e in header["modules"]:
+        lead = tuple(e["lead"])
+        d_in, r, d_out, nsel = e["din"], e["r"], e["dout"], e["nsel"]
+        L = int(np.prod(lead, dtype=np.int64)) if lead else 1
+        n_slots = L * r
+        if e["dense"]:
+            idx = np.arange(n_slots)
+        else:
+            idx = np.frombuffer(body, np.uint32, nsel, off)
+            off += nsel * INDEX_BYTES
+        dt = np.dtype(e["dt"]) if e["dt"] != "bfloat16" else BF16
+        a = np.zeros((n_slots, d_in), np.float32)
+        b = np.zeros((n_slots, d_out), np.float32)
+        if "a" in halves:
+            rows, off = _decode_rows(body, off, nsel, d_in, codec)
+            a[idx] = rows
+        if "b" in halves:
+            rows, off = _decode_rows(body, off, nsel, d_out, codec)
+            b[idx] = rows
+        a = a.reshape(L, r, d_in).transpose(0, 2, 1).reshape(lead + (d_in, r))
+        b = b.reshape(L, r, d_out).reshape(lead + (r, d_out))
+        node = tree
+        parts = e["p"].split(SEP)
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = {"a": a.astype(dt), "b": b.astype(dt)}
+    return tree
+
+
+def payload_stats(payload):
+    """Per-section byte accounting, computed from the header alone.  Works
+    for both rank-sparse adapter payloads and dense pytree payloads."""
+    header, body = _parse_header(payload)
+    codec = header["codec"]
+    ebytes = ELEMENT_BYTES[codec]
+    if header.get("dense"):  # encode_dense payload: one row per leaf
+        n_el = sum(int(np.prod(e["shape"], dtype=np.int64)) if e["shape"]
+                   else 1 for e in header["modules"])
+        scale_b = len(header["modules"]) * SCALE_BYTES if codec == "int8" else 0
+        header_b = len(payload) - len(body)
+        return PayloadStats(total_bytes=len(payload), header_bytes=header_b,
+                            index_bytes=0, scale_bytes=scale_b,
+                            data_bytes=n_el * ebytes,
+                            n_selected=0, n_elements=n_el)
+    halves = header["halves"]
+    idx_b = scale_b = n_sel = n_el = 0
+    for e in header["modules"]:
+        per_slot = (e["din"] if "a" in halves else 0) + \
+                   (e["dout"] if "b" in halves else 0)
+        n_sel += e["nsel"]
+        n_el += e["nsel"] * per_slot
+        if not e["dense"]:
+            idx_b += e["nsel"] * INDEX_BYTES
+        if codec == "int8":
+            scale_b += e["nsel"] * SCALE_BYTES * len(halves)
+    data_b = n_el * ebytes
+    header_b = len(payload) - len(body)
+    assert header_b + idx_b + scale_b + data_b == len(payload)
+    return PayloadStats(total_bytes=len(payload), header_bytes=header_b,
+                        index_bytes=idx_b, scale_bytes=scale_b,
+                        data_bytes=data_b, n_selected=n_sel, n_elements=n_el)
+
+
+# ---------------------------------------------------------------------------
+# dense pytree payloads (full-FT baseline, global broadcast of params)
+# ---------------------------------------------------------------------------
+
+
+def encode_dense(tree, codec="fp32", seed=0):
+    """Pack an arbitrary dict/list pytree of arrays (every element travels).
+    int8 quantizes per-leaf (one scale for the whole leaf).  Uses the same
+    ``#i`` list-index convention as checkpoint/io.py so digit-keyed dicts
+    (block positions) restore as dicts, not lists."""
+    _check_codec(codec)
+    rng = np.random.default_rng(seed)
+    from repro.checkpoint.io import flatten_tree
+    mods, body = [], []
+    for path, x in flatten_tree(tree).items():
+        mods.append({"p": path, "shape": list(x.shape), "dt": x.dtype.name})
+        s, d = _encode_rows(np.atleast_1d(x.astype(np.float32)).reshape(1, -1),
+                            codec, rng)
+        body += [s, d]
+    header = json.dumps({"v": 1, "codec": codec, "dense": True,
+                         "modules": mods}, separators=(",", ":")).encode()
+    return MAGIC + struct.pack("<I", len(header)) + header + b"".join(body)
+
+
+def decode_dense(payload):
+    from repro.checkpoint.io import _listify
+    header, body = _parse_header(payload)
+    codec = header["codec"]
+    tree, off = {}, 0
+    for e in header["modules"]:
+        n = int(np.prod(e["shape"], dtype=np.int64)) if e["shape"] else 1
+        rows, off = _decode_rows(body, off, 1, n, codec)
+        x = rows.reshape(e["shape"]).astype(
+            BF16 if e["dt"] == "bfloat16" else np.dtype(e["dt"]))
+        node = tree
+        parts = e["p"].split(SEP)
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = x
+    return _listify(tree)

@@ -1,0 +1,113 @@
+"""Simulated client↔server transport: per-client links and a round clock.
+
+Each client k has a LinkModel (uplink/downlink bandwidth, latency, uplink
+drop probability, relative compute speed).  SimulatedNetwork turns payload
+sizes into Transmission records with simulated arrival times; the engine
+never sleeps — time is a number the server advances.
+
+This expresses straggler and partial-delivery scenarios beyond what the
+``participation`` knob alone can: a client may participate every round yet
+arrive late (slow link / slow compute) or not at all (drop), which is what
+the async buffered server in comm/server.py is for.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+_INF = float("inf")
+
+
+@dataclasses.dataclass
+class LinkModel:
+    """Per-client network + compute model (bandwidth in bytes/sec)."""
+    uplink_bytes_per_s: float = _INF
+    downlink_bytes_per_s: float = _INF
+    latency_s: float = 0.0
+    drop_prob: float = 0.0        # uplink loss; the round proceeds without it
+    compute_speed: float = 1.0    # relative local-training speed
+
+
+@dataclasses.dataclass(frozen=True)
+class Transmission:
+    client: int
+    size_bytes: int
+    sent_at: float
+    arrived_at: Optional[float]   # None = dropped
+
+    @property
+    def dropped(self) -> bool:
+        return self.arrived_at is None
+
+
+class RoundClock:
+    """Monotone simulated clock; the server owns it."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def advance_to(self, t: float):
+        self.now = max(self.now, float(t))
+
+
+class SimulatedNetwork:
+    """Fleet of per-client links with deterministic (seeded) packet loss."""
+
+    def __init__(self, links: Sequence[LinkModel], seed: int = 0):
+        self.links = list(links)
+        self._rng = np.random.default_rng(seed)
+
+    def __len__(self):
+        return len(self.links)
+
+    def _xfer(self, k, nbytes, now, bps, can_drop):
+        link = self.links[k]
+        dt = link.latency_s + (nbytes / bps if bps != _INF else 0.0)
+        dropped = can_drop and link.drop_prob > 0 \
+            and self._rng.random() < link.drop_prob
+        return Transmission(k, int(nbytes), float(now),
+                            None if dropped else float(now) + dt)
+
+    def uplink(self, k, nbytes, now=0.0) -> Transmission:
+        return self._xfer(k, nbytes, now, self.links[k].uplink_bytes_per_s,
+                          can_drop=True)
+
+    def downlink(self, k, nbytes, now=0.0) -> Transmission:
+        # server broadcast is modeled reliable; only uplinks drop
+        return self._xfer(k, nbytes, now, self.links[k].downlink_bytes_per_s,
+                          can_drop=False)
+
+    def compute_time(self, k, n_steps, step_time_s=0.01) -> float:
+        return n_steps * step_time_s / self.links[k].compute_speed
+
+
+def ideal_network(n_clients: int) -> SimulatedNetwork:
+    """Infinite bandwidth, zero latency, no loss — the seed-path default."""
+    return SimulatedNetwork([LinkModel() for _ in range(n_clients)])
+
+
+def uniform_fleet(n_clients: int, *, uplink_bytes_per_s=12.5e6,
+                  downlink_bytes_per_s=125e6, latency_s=0.05,
+                  drop_prob=0.0, seed=0) -> SimulatedNetwork:
+    """Homogeneous fleet (default ~100 Mbit/s up, 1 Gbit/s down)."""
+    return SimulatedNetwork(
+        [LinkModel(uplink_bytes_per_s, downlink_bytes_per_s, latency_s,
+                   drop_prob) for _ in range(n_clients)], seed=seed)
+
+
+def heterogeneous_fleet(n_clients: int, *, seed=0, straggler_frac=0.25,
+                        slow_factor=8.0, uplink_bytes_per_s=12.5e6,
+                        latency_s=0.05, drop_prob=0.0) -> SimulatedNetwork:
+    """A fraction of clients are stragglers: slow_factor× slower compute and
+    uplink.  Deterministic per seed — the straggler set is sampled once."""
+    rng = np.random.default_rng(seed)
+    n_slow = int(round(straggler_frac * n_clients))
+    slow = set(rng.choice(n_clients, size=n_slow, replace=False).tolist())
+    links = []
+    for k in range(n_clients):
+        f = slow_factor if k in slow else 1.0
+        links.append(LinkModel(uplink_bytes_per_s / f, 125e6, latency_s,
+                               drop_prob, compute_speed=1.0 / f))
+    return SimulatedNetwork(links, seed=seed + 1)

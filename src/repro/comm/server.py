@@ -1,0 +1,123 @@
+"""Server endpoints: decode uplinks and aggregate into the global adapters.
+
+SyncServer   — one aggregation per round over the round's surviving uploads;
+               reproduces the seed training path exactly under the fp32
+               codec and an ideal network.
+BuffServer   — FedBuff-style async buffered aggregation (Nguyen et al.,
+               2022): updates are buffered as they arrive, each weighted by
+               data size × staleness discount (1+τ)^(-α); when the buffer
+               holds K updates the server applies their normalized sum and
+               bumps the global version.  Only delta-additive methods are
+               supported async (fl_lora / ffa_lora / lora_a2) — flexlora
+               and hetlora need the full synchronized cohort.
+
+Both decode payloads through comm/codec.py; neither ever sees a client's
+in-memory pytree directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.comm import codec
+from repro.core import aggregate
+from repro.utils import tree_add, tree_scale, tree_weighted_sum
+
+ASYNC_METHODS = ("fl_lora", "ffa_lora", "lora_a2")
+
+
+@dataclasses.dataclass
+class ClientUpdate:
+    """One decoded-on-arrival client→server upload."""
+    client_id: int
+    payload: bytes
+    weight: float          # FedAvg data weight (unnormalized)
+    version: int           # global version the client trained from
+    parity: int            # which half the delta moves
+    sent_at: float = 0.0
+    arrived_at: float = 0.0
+
+
+class SyncServer:
+    """Round-synchronous aggregation endpoint for every paper method."""
+
+    def __init__(self, method: str, adapters, *, r_G: Optional[int] = None,
+                 client_rank_list: Optional[Sequence[int]] = None,
+                 hetlora_gamma: float = 0.99):
+        self.method = method
+        self.adapters = adapters
+        self.r_G = r_G
+        self.client_rank_list = client_rank_list
+        self.hetlora_gamma = hetlora_gamma
+        self.version = 0
+
+    def aggregate_round(self, updates: List[ClientUpdate]):
+        """Decode the round's uploads and fold them into the global state.
+        Weights renormalize over the survivors (dropped uploads never get
+        here).  Returns the decoded deltas (for similarity tracking)."""
+        self.version += 1
+        if not updates:
+            return []
+        deltas = [codec.decode(u.payload) for u in updates]
+        wsum = sum(u.weight for u in updates)
+        w = [u.weight / wsum for u in updates]
+        if self.method == "fl_lora":
+            self.adapters = aggregate.fedavg(self.adapters, deltas, w)
+        elif self.method in ("ffa_lora", "lora_a2"):
+            self.adapters = aggregate.lora_a2(self.adapters, deltas, w)
+        elif self.method == "flexlora":
+            finals = [tree_add(self.adapters, d) for d in deltas]
+            self.adapters = aggregate.flexlora(self.adapters, finals, w,
+                                               self.r_G)
+        elif self.method == "hetlora":
+            ranks = [self.client_rank_list[u.client_id] for u in updates]
+            self.adapters = aggregate.hetlora(self.adapters, deltas, w,
+                                              ranks, self.hetlora_gamma)
+        else:
+            raise ValueError(self.method)
+        return deltas
+
+
+class BuffServer:
+    """Async buffered server: staleness-weighted aggregation of the K most
+    recently arrived updates (FedBuff), applied with a server learning rate.
+    """
+
+    def __init__(self, method: str, adapters, *, buffer_size: int,
+                 staleness_alpha: float = 0.5, server_lr: float = 1.0):
+        if method not in ASYNC_METHODS:
+            raise ValueError(
+                f"async aggregation supports {ASYNC_METHODS}, got {method!r}"
+                " (flexlora/hetlora need a synchronized cohort)")
+        if buffer_size < 1:
+            raise ValueError("buffer_size must be >= 1")
+        self.method = method
+        self.adapters = adapters
+        self.buffer_size = buffer_size
+        self.staleness_alpha = staleness_alpha
+        self.server_lr = server_lr
+        self.version = 0
+        self.staleness_log: List[int] = []
+        self._buffer = []  # (decoded delta, discounted weight)
+
+    def receive(self, update: ClientUpdate) -> bool:
+        """Buffer one arrived upload; returns True when it triggered an
+        aggregation (global version bump)."""
+        staleness = self.version - update.version
+        self.staleness_log.append(staleness)
+        disc = (1.0 + staleness) ** (-self.staleness_alpha)
+        self._buffer.append((codec.decode(update.payload),
+                             update.weight * disc))
+        if len(self._buffer) < self.buffer_size:
+            return False
+        self._flush()
+        return True
+
+    def _flush(self):
+        deltas = [d for d, _ in self._buffer]
+        wsum = sum(w for _, w in self._buffer)
+        w = [x / wsum for _, x in self._buffer]
+        step = tree_weighted_sum(deltas, w)
+        self.adapters = tree_add(self.adapters, tree_scale(step, self.server_lr))
+        self.version += 1
+        self._buffer = []

@@ -11,22 +11,37 @@ Implements the full client/server loop for every method the paper compares:
 
 The engine is model-agnostic: it drives any ModelConfig whose loss is
 classifier_loss (encoder track) or lm_loss (decoder track).
+
+Every client→server and server→client exchange goes through repro.comm:
+uploads are wire payloads (rank-sparse, element-coded — see comm/codec.py)
+moved over a simulated per-client network (comm/network.py) into a server
+endpoint (comm/server.py).  ``history["uploaded"]`` is therefore *measured*
+payload bytes; for the lossless fp32 codec the element section is asserted
+to agree with the analytic closed form (_upload_count).  Two server modes:
+
+    server_mode='sync'   one aggregation per round (the paper's loop)
+    server_mode='async'  FedBuff-style buffered aggregation under the
+                         simulated clock — stragglers no longer gate the
+                         round; staleness is discounted by (1+τ)^(-α)
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import heapq
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import codec
+from repro.comm import network as net
+from repro.comm.server import BuffServer, ClientUpdate, SyncServer
 from repro.configs.base import ModelConfig
 from repro.core import aggregate, dp, lora, selection
 from repro.models import model as M
 from repro.optim import adamw
-from repro.utils import tree_add, tree_sub, tree_scale
+from repro.utils import tree_sub
 
 
 @dataclasses.dataclass
@@ -52,6 +67,14 @@ class FedConfig:
     eval_every: int = 5
     track_similarity: bool = False
     hetlora_gamma: float = 0.99
+    # --- communication subsystem (repro.comm) ---
+    codec: str = "fp32"           # uplink element codec: fp32 | bf16 | int8
+    server_mode: str = "sync"     # 'sync' | 'async' (FedBuff-style buffered)
+    buffer_size: Optional[int] = None  # async: aggregate every K arrivals
+    staleness_alpha: float = 0.5  # async: staleness discount exponent
+    server_lr: float = 1.0        # async: server step size on the buffer sum
+    network: Optional[object] = None   # comm.network.SimulatedNetwork
+    step_time_s: float = 0.01     # simulated seconds per local step
 
 
 PARITY_A, PARITY_B, PARITY_BOTH = 0, 1, 2
@@ -110,10 +133,11 @@ def make_full_ft_step(cfg: ModelConfig, opt_cfg):
 def _batches(rng, n, batch_size):
     idx = rng.permutation(n)
     n_batches = max(1, -(-n // batch_size))
-    pad = n_batches * batch_size - n
-    if pad:
-        idx = np.concatenate([idx, idx[:pad]])
-    return idx.reshape(n_batches, batch_size)
+    # np.resize cycles idx, padding the tail batch (works even when the
+    # client's dataset is smaller than half the batch, where a single
+    # concat of idx[:pad] would come up short)
+    return np.resize(idx, n_batches * batch_size).reshape(n_batches,
+                                                          batch_size)
 
 
 def _make_batch(cfg, ds, idx):
@@ -150,6 +174,112 @@ def make_eval(cfg: ModelConfig, scale):
     return evaluate
 
 
+# ---------------------------------------------------------------------------
+# engine context + the client-work function shared by sync and async servers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _ClientResult:
+    client_id: int
+    payload: bytes
+    masks: dict
+    losses: list
+    n_steps: int
+
+
+@dataclasses.dataclass
+class _Ctx:
+    """Everything a client round needs; rng/kd are consumed statefully in
+    launch order so the sync path matches the pre-comm seed trajectory."""
+    cfg: ModelConfig
+    fed: FedConfig
+    params: dict
+    step: object
+    client_ds: list
+    weights: np.ndarray
+    client_rank_list: list
+    n_mod: int
+    full_masks: dict
+    rng: np.random.Generator
+    net: net.SimulatedNetwork
+    kd: jax.Array
+
+
+def _round_parity(fed, t):
+    """Which adapter half moves in 1-based round t."""
+    if fed.method == "lora_a2":
+        return (t % 2) if fed.alternating else PARITY_B
+    if fed.method == "ffa_lora":
+        return PARITY_B
+    return PARITY_BOTH
+
+
+def _enc_seed(fed, t, k):
+    """Deterministic int8 stochastic-rounding seed per (round, client)."""
+    return (fed.seed * 1_000_003 + t * 1009 + k) % (2 ** 31)
+
+
+def _client_update(ctx: _Ctx, global_adapters, k, parity, enc_seed):
+    """One client's local round starting from the decoded broadcast state.
+    Returns the wire payload (masked delta through the configured codec)."""
+    fed, cfg = ctx.fed, ctx.cfg
+    ds_k = ctx.client_ds[k]
+    n_k = len(ds_k) if hasattr(ds_k, "__len__") else len(ds_k["labels"])
+    local = global_adapters
+    opt_state = adamw.init_state(local)
+    n_steps = 0
+
+    # --- rank selection (lora_a2): probe epoch -> scores -> masks ---
+    if fed.method == "lora_a2":
+        probe, probe_opt = local, opt_state
+        for _ in range(fed.probe_epochs):
+            for bidx in _batches(ctx.rng, n_k, fed.batch_size):
+                probe, probe_opt, _ = ctx.step(ctx.params, probe, probe_opt,
+                                               _make_batch(cfg, ds_k, bidx),
+                                               parity, ctx.full_masks)
+                n_steps += 1
+        probe_delta = tree_sub(probe, global_adapters)
+        scores = _score(fed, global_adapters, probe_delta, parity)
+        masks, _ = selection.select_topk(scores, ctx.client_rank_list[k],
+                                         ctx.n_mod)
+        local, opt_state = global_adapters, adamw.init_state(global_adapters)
+    elif fed.method == "hetlora":
+        masks = selection.first_k_masks(global_adapters,
+                                        ctx.client_rank_list[k])
+    else:
+        masks = ctx.full_masks
+
+    # --- local training ---
+    losses = []
+    for _ in range(fed.local_epochs):
+        for bidx in _batches(ctx.rng, n_k, fed.batch_size):
+            local, opt_state, loss = ctx.step(ctx.params, local, opt_state,
+                                              _make_batch(cfg, ds_k, bidx),
+                                              parity, masks)
+            losses.append(float(loss))
+            n_steps += 1
+
+    delta = tree_sub(local, global_adapters)
+    masked = selection.mask_delta(delta, masks, parity) \
+        if parity != PARITY_BOTH else delta
+
+    if fed.dp_epsilon is not None:
+        ctx.kd, kn = jax.random.split(ctx.kd)
+        masked = dp.privatize(masked, kn, epsilon=fed.dp_epsilon,
+                              clip_norm=fed.dp_clip)
+
+    payload = codec.encode(masked, masks, parity, codec=fed.codec,
+                           seed=enc_seed)
+    if fed.codec == "fp32":
+        # measured wire bytes must agree with the analytic closed form
+        stats = codec.payload_stats(payload)
+        want = int(4 * _upload_count(global_adapters, masks, parity))
+        assert stats.data_bytes == want, \
+            f"measured {stats.data_bytes}B != analytic {want}B"
+    return _ClientResult(k, payload, masks, losses, n_steps)
+
+
 def run_federated(cfg: ModelConfig, fed: FedConfig, train_ds, test_ds,
                   client_indices):
     """Run the full federated fine-tuning session.  Returns a history dict."""
@@ -165,140 +295,222 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, train_ds, test_ds,
                  for i in client_indices]
 
     history = {"round": [], "acc": [], "loss": [], "uploaded": [],
-               "uploaded_cum": 0.0, "mask_overlap": [], "update_cosine": []}
+               "uploaded_cum": 0.0, "downloaded_cum": 0.0, "sim_time": [],
+               "mask_overlap": [], "update_cosine": []}
+    network = fed.network if fed.network is not None \
+        else net.ideal_network(fed.n_clients)
 
     if fed.method == "full_ft":
-        return _run_full_ft(cfg, fed, params, client_ds, weights, test_ds, history, rng)
+        return _run_full_ft(cfg, fed, params, client_ds, weights, test_ds,
+                            history, rng, network)
 
     r_G = adapter_rank(fed)
     adapters = lora.init_adapters(cfg, ka, r_G)
-    n_mod = lora.n_modules(cfg)
     opt_cfg = adamw.AdamWConfig(lr=fed.lr, weight_decay=fed.weight_decay)
-    step = make_local_step(cfg, fed, opt_cfg)
+    ctx = _Ctx(cfg=cfg, fed=fed, params=params,
+               step=make_local_step(cfg, fed, opt_cfg), client_ds=client_ds,
+               weights=weights,
+               client_rank_list=(list(fed.client_ranks)
+                                 if fed.client_ranks is not None
+                                 else [fed.rank] * fed.n_clients),
+               n_mod=lora.n_modules(cfg),
+               full_masks=selection.masks_like(adapters), rng=rng,
+               net=network, kd=kd)
     evaluate = make_eval(cfg, lora.lora_scale(r_G)) if cfg.is_encoder else None
-    full_masks = selection.masks_like(adapters)
-    client_rank_list = (list(fed.client_ranks) if fed.client_ranks is not None
-                        else [fed.rank] * fed.n_clients)
 
-    for t in range(1, fed.rounds + 1):
-        if fed.method == "lora_a2":
-            parity = (t % 2) if fed.alternating else PARITY_B
-        elif fed.method == "ffa_lora":
-            parity = PARITY_B
-        else:
-            parity = PARITY_BOTH
-
-        participants = _sample_participants(rng, fed)
-        deltas, masked_deltas, client_finals = [], [], []
-        round_upload = 0.0
-        round_losses = []
-        round_masks = []
-
-        for k in participants:
-            local = adapters
-            opt_state = adamw.init_state(local)
-            ds_k = client_ds[k]
-            n_k = len(ds_k) if hasattr(ds_k, "__len__") else len(ds_k["labels"])
-
-            # --- rank selection (lora_a2): probe epoch -> scores -> masks ---
-            if fed.method == "lora_a2":
-                probe, probe_opt = local, opt_state
-                for _ in range(fed.probe_epochs):
-                    for bidx in _batches(rng, n_k, fed.batch_size):
-                        probe, probe_opt, _ = step(params, probe, probe_opt,
-                                                   _make_batch(cfg, ds_k, bidx),
-                                                   parity, full_masks)
-                probe_delta = tree_sub(probe, adapters)
-                scores = _score(fed, adapters, probe_delta, parity)
-                masks, _ = selection.select_topk(scores, client_rank_list[k], n_mod)
-                local, opt_state = adapters, adamw.init_state(adapters)
-            elif fed.method == "hetlora":
-                masks = selection.first_k_masks(adapters, client_rank_list[k])
-            else:
-                masks = full_masks
-            round_masks.append(masks)
-
-            # --- local training ---
-            for _ in range(fed.local_epochs):
-                for bidx in _batches(rng, n_k, fed.batch_size):
-                    local, opt_state, loss = step(params, local, opt_state,
-                                                  _make_batch(cfg, ds_k, bidx),
-                                                  parity, masks)
-                    round_losses.append(float(loss))
-
-            delta = tree_sub(local, adapters)
-            masked = selection.mask_delta(delta, masks, parity) \
-                if parity != PARITY_BOTH else delta
-
-            if fed.dp_epsilon is not None:
-                kd, kn = jax.random.split(kd)
-                masked = dp.privatize(masked, kn, epsilon=fed.dp_epsilon,
-                                      clip_norm=fed.dp_clip)
-                delta = masked
-
-            deltas.append(delta)
-            masked_deltas.append(masked)
-            client_finals.append(local)
-            round_upload += _upload_count(fed, adapters, masks, parity)
-
-        w = [weights[k] for k in participants]
-        w = [x / sum(w) for x in w]
-        if fed.method in ("fl_lora",):
-            adapters = aggregate.fedavg(adapters, deltas, w)
-        elif fed.method in ("ffa_lora", "lora_a2"):
-            adapters = aggregate.lora_a2(adapters, masked_deltas, w)
-        elif fed.method == "flexlora":
-            adapters = aggregate.flexlora(adapters, client_finals, w, r_G)
-        elif fed.method == "hetlora":
-            adapters = aggregate.hetlora(adapters, deltas, w,
-                                         client_rank_list, fed.hetlora_gamma)
-        else:
-            raise ValueError(fed.method)
-
-        history["uploaded_cum"] += round_upload
-        if t % fed.eval_every == 0 or t == fed.rounds:
-            acc = evaluate(params, adapters, test_ds) if evaluate else float("nan")
-            history["round"].append(t)
-            history["acc"].append(acc)
-            history["loss"].append(float(np.mean(round_losses)))
-            history["uploaded"].append(history["uploaded_cum"])
-            if fed.track_similarity:
-                history["mask_overlap"].append(_mask_overlap(round_masks))
-                history["update_cosine"].append(_update_cosine(deltas, adapters, parity))
-
-    history["adapters"] = adapters
+    if fed.server_mode == "async":
+        _run_async(ctx, adapters, history, test_ds, evaluate)
+    elif fed.server_mode == "sync":
+        _run_sync(ctx, adapters, history, test_ds, evaluate)
+    else:
+        raise ValueError(fed.server_mode)
     history["params"] = params
     return history
 
 
-def _run_full_ft(cfg, fed, params, client_ds, weights, test_ds, history, rng):
+def _broadcast(adapters, full_masks):
+    """Server→client: the global adapters as one dense fp32 payload (the
+    downlink codec stays lossless; quantized broadcast is an open item)."""
+    payload = codec.encode(adapters, full_masks, PARITY_BOTH, codec="fp32")
+    return payload, codec.decode(payload)
+
+
+def _run_sync(ctx: _Ctx, adapters, history, test_ds, evaluate):
+    """One aggregation per round; round time = slowest participant."""
+    fed = ctx.fed
+    server = SyncServer(fed.method, adapters, r_G=adapter_rank(fed),
+                        client_rank_list=ctx.client_rank_list,
+                        hetlora_gamma=fed.hetlora_gamma)
+    clock = net.RoundClock()
+
+    for t in range(1, fed.rounds + 1):
+        parity = _round_parity(fed, t)
+        participants = _sample_participants(ctx.rng, fed)
+        bcast, global_at_client = _broadcast(server.adapters, ctx.full_masks)
+        ref_adapters = server.adapters  # pre-aggregation global (tracking)
+
+        updates, results, arrivals = [], [], []
+        for k in participants:
+            down = ctx.net.downlink(k, len(bcast), now=clock.now)
+            history["downloaded_cum"] += len(bcast)
+            res = _client_update(ctx, global_at_client, k, parity,
+                                 _enc_seed(fed, t, k))
+            t_done = down.arrived_at + \
+                ctx.net.compute_time(k, res.n_steps, fed.step_time_s)
+            up = ctx.net.uplink(k, len(res.payload), now=t_done)
+            history["uploaded_cum"] += len(res.payload)
+            results.append(res)
+            arrivals.append(up.arrived_at if not up.dropped else t_done)
+            if not up.dropped:
+                updates.append(ClientUpdate(k, res.payload, ctx.weights[k],
+                                            server.version, parity,
+                                            sent_at=t_done,
+                                            arrived_at=up.arrived_at))
+        deltas = server.aggregate_round(updates)
+        clock.advance_to(max(arrivals, default=clock.now))
+
+        if t % fed.eval_every == 0 or t == fed.rounds:
+            acc = evaluate(ctx.params, server.adapters, test_ds) \
+                if evaluate else float("nan")
+            history["round"].append(t)
+            history["acc"].append(acc)
+            history["loss"].append(
+                float(np.mean([l for r in results for l in r.losses])))
+            history["uploaded"].append(history["uploaded_cum"])
+            history["sim_time"].append(clock.now)
+            if fed.track_similarity:
+                history["mask_overlap"].append(
+                    _mask_overlap([r.masks for r in results]))
+                history["update_cosine"].append(
+                    _update_cosine(deltas, ref_adapters, parity))
+    history["adapters"] = server.adapters
+
+
+def _run_async(ctx: _Ctx, adapters, history, test_ds, evaluate):
+    """Event-driven FedBuff loop: a persistent cohort of clients trains
+    continuously; the server aggregates every buffer_size arrivals.  One
+    'round' in history = one global version (buffer flush)."""
+    fed = ctx.fed
+    participants = _sample_participants(ctx.rng, fed)
+    K = fed.buffer_size or max(1, len(participants) // 2)
+    server = BuffServer(fed.method, adapters, buffer_size=K,
+                        staleness_alpha=fed.staleness_alpha,
+                        server_lr=fed.server_lr)
+    heap, seq = [], 0
+    pending_losses = []
+    launches = {k: 0 for k in participants}
+    # with lossy uplinks the server version may never advance; a launch
+    # budget (generous vs the ~rounds*K + cohort launches of a clean run)
+    # guarantees termination instead of relaunching dropped clients forever
+    launch_budget = (fed.rounds * K + len(participants)) * 8
+    bcast_cache = {}  # server.version -> (payload, decoded) broadcast
+
+    def launch(k, now):
+        nonlocal seq
+        # async has no global rounds, so the alternating freeze is paced by
+        # each client's own launch count — both halves still train equally
+        # often even when clients straddle buffer flushes
+        launches[k] += 1
+        parity = _round_parity(fed, launches[k])
+        if server.version not in bcast_cache:
+            bcast_cache.clear()  # only the current version is ever fetched
+            bcast_cache[server.version] = _broadcast(server.adapters,
+                                                     ctx.full_masks)
+        bcast, global_at_client = bcast_cache[server.version]
+        down = ctx.net.downlink(k, len(bcast), now=now)
+        history["downloaded_cum"] += len(bcast)
+        res = _client_update(ctx, global_at_client, k, parity,
+                             _enc_seed(fed, server.version + 1, k))
+        t_done = down.arrived_at + \
+            ctx.net.compute_time(k, res.n_steps, fed.step_time_s)
+        up = ctx.net.uplink(k, len(res.payload), now=t_done)
+        history["uploaded_cum"] += len(res.payload)
+        t_arr = up.arrived_at if not up.dropped else t_done
+        heapq.heappush(heap, (t_arr, seq, k, res, server.version, parity,
+                              up.dropped))
+        seq += 1
+
+    for k in participants:
+        launch(k, 0.0)
+
+    def record(version, now):
+        acc = evaluate(ctx.params, server.adapters, test_ds) \
+            if evaluate else float("nan")
+        history["round"].append(version)
+        history["acc"].append(acc)
+        history["loss"].append(float(np.mean(pending_losses))
+                               if pending_losses else float("nan"))
+        history["uploaded"].append(history["uploaded_cum"])
+        history["sim_time"].append(now)
+        pending_losses.clear()
+
+    while heap and server.version < fed.rounds:
+        t_arr, _, k, res, v0, parity, dropped = heapq.heappop(heap)
+        pending_losses.extend(res.losses)
+        if not dropped:
+            flushed = server.receive(
+                ClientUpdate(k, res.payload, ctx.weights[k], v0, parity,
+                             arrived_at=t_arr))
+            if flushed and (server.version % fed.eval_every == 0
+                            or server.version == fed.rounds):
+                record(server.version, t_arr)
+        if server.version < fed.rounds and seq < launch_budget:
+            launch(k, t_arr)
+
+    if not history["round"] or history["round"][-1] != server.version:
+        record(server.version, history["sim_time"][-1]
+               if history["sim_time"] else 0.0)
+    history["staleness"] = list(server.staleness_log)
+    history["adapters"] = server.adapters
+
+
+def _run_full_ft(cfg, fed, params, client_ds, weights, test_ds, history, rng,
+                 network):
+    """FedAvg on all base params; uploads travel as dense pytree payloads."""
     opt_cfg = adamw.AdamWConfig(lr=fed.lr)
     step = make_full_ft_step(cfg, opt_cfg)
     evaluate = make_eval(cfg, 1.0) if cfg.is_encoder else None
-    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    clock = net.RoundClock()
     for t in range(1, fed.rounds + 1):
         participants = _sample_participants(rng, fed)
-        deltas, losses = [], []
+        bcast = codec.encode_dense(params, codec="fp32")
+        deltas, survivors, losses, arrivals = [], [], [], []
         for k in participants:
+            down = network.downlink(k, len(bcast), now=clock.now)
+            history["downloaded_cum"] += len(bcast)
             local, opt_state = params, adamw.init_state(params)
             ds_k = client_ds[k]
             n_k = len(ds_k) if hasattr(ds_k, "__len__") else len(ds_k["labels"])
+            n_steps = 0
             for _ in range(fed.local_epochs):
                 for bidx in _batches(rng, n_k, fed.batch_size):
                     local, opt_state, loss = step(local, opt_state,
                                                   _make_batch(cfg, ds_k, bidx))
                     losses.append(float(loss))
-            deltas.append(tree_sub(local, params))
-        w = [weights[k] for k in participants]
-        w = [x / sum(w) for x in w]
-        params = aggregate.fedavg_params(params, deltas, w)
-        history["uploaded_cum"] += n_params * len(participants)
+                    n_steps += 1
+            payload = codec.encode_dense(tree_sub(local, params),
+                                         codec=fed.codec,
+                                         seed=_enc_seed(fed, t, k))
+            t_done = down.arrived_at + \
+                network.compute_time(k, n_steps, fed.step_time_s)
+            up = network.uplink(k, len(payload), now=t_done)
+            history["uploaded_cum"] += len(payload)
+            arrivals.append(up.arrived_at if not up.dropped else t_done)
+            if not up.dropped:
+                deltas.append(codec.decode_dense(payload))
+                survivors.append(k)
+        if deltas:
+            w = [weights[k] for k in survivors]
+            w = [x / sum(w) for x in w]
+            params = aggregate.fedavg_params(params, deltas, w)
+        clock.advance_to(max(arrivals, default=clock.now))
         if t % fed.eval_every == 0 or t == fed.rounds:
             acc = evaluate(params, None, test_ds) if evaluate else float("nan")
             history["round"].append(t)
             history["acc"].append(acc)
             history["loss"].append(float(np.mean(losses)))
             history["uploaded"].append(history["uploaded_cum"])
+            history["sim_time"].append(clock.now)
     history["params"] = params
     return history
 
@@ -320,10 +532,18 @@ def _score(fed, adapters, probe_delta, parity):
     raise ValueError(fed.criterion)
 
 
-def _upload_count(fed, adapters, masks, parity):
-    if parity == PARITY_BOTH:
-        return sum(x.size for x in jax.tree.leaves(adapters))
-    return selection.selected_upload_count(masks, adapters, parity)
+def _upload_count(adapters, masks, parity):
+    """Analytic parameter count for one upload: per selected rank slot, the
+    travelling halves' row/column (the closed form comm_cost.py also uses)."""
+    total = 0.0
+    for path, ab in lora.iter_modules(adapters):
+        per_slot = 0
+        if parity in (PARITY_A, PARITY_BOTH):
+            per_slot += ab["a"].shape[-2]   # d_in
+        if parity in (PARITY_B, PARITY_BOTH):
+            per_slot += ab["b"].shape[-1]   # d_out
+        total += float(np.asarray(masks[path]).sum()) * per_slot
+    return total
 
 
 def _mask_overlap(round_masks):

@@ -10,6 +10,9 @@ from repro.core import lora
 from repro.models import model as M
 from repro.optim import adamw
 
+# one forward+train+decode step for every assigned production arch — ~40s
+pytestmark = pytest.mark.slow
+
 ASSIGNED = [
     "rwkv6-7b", "qwen2-7b", "dbrx-132b", "kimi-k2-1t-a32b", "gemma3-12b",
     "musicgen-medium", "zamba2-2.7b", "llama3-8b", "qwen2.5-32b", "qwen2-vl-7b",

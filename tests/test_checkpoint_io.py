@@ -1,0 +1,43 @@
+"""Contract tests for checkpoint/io.py path-flattening — the comm codec
+reuses this scheme, so restore must be exact, including bf16 leaves."""
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt
+from repro.configs.base import get_config
+from repro.core import lora
+
+
+def test_adapter_roundtrip_with_bf16_and_metadata(tmp_path):
+    import ml_dtypes
+    cfg = get_config("roberta-sim")
+    adapters = lora.init_adapters(cfg, jax.random.PRNGKey(0), 4)
+    # mix precision: every 'b' half stored as bf16, plus a list-valued node
+    for path, ab in lora.iter_modules(adapters):
+        ab["b"] = np.asarray(ab["b"]).astype(ml_dtypes.bfloat16)
+    tree = {"adapters": adapters,
+            "schedule": [np.float32(0.1), np.arange(3, dtype=np.int32)]}
+    meta = {"rounds": 12, "arch": cfg.name, "nested": {"codec": "bf16"}}
+    path = str(tmp_path / "ck.npz")
+    ckpt.save(path, tree, metadata=meta)
+    out, got_meta = ckpt.restore(path)
+    assert got_meta == meta
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype          # bf16 stays bf16
+        np.testing.assert_array_equal(x, y)  # restore is exact
+
+
+def test_restore_list_nodes_and_digit_keys(tmp_path):
+    tree = {"blocks": {"0": np.ones(2, np.float32),
+                       "10": np.zeros(3, np.float32)},
+            "stack": [np.float32(1.0), np.float32(2.0)]}
+    p = str(tmp_path / "t.npz")
+    ckpt.save(p, tree)
+    out, meta = ckpt.restore(p)
+    assert meta == {}
+    assert isinstance(out["blocks"], dict)   # digit keys stay dict keys
+    assert isinstance(out["stack"], list)
+    assert ckpt.tree_equal(tree, out)

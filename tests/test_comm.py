@@ -1,0 +1,305 @@
+"""repro.comm: wire codec round-trips, byte accounting vs the closed form,
+the simulated network, and sync/async server equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import codec, network, server
+from repro.configs.base import get_config
+from repro.core import lora, selection
+from repro.core.federation import FedConfig, run_federated
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_classification
+from repro.utils import tree_sub
+
+CFG = get_config("roberta-sim")
+
+
+def _adapters(seed, rank=4):
+    return lora.init_adapters(CFG, jax.random.PRNGKey(seed), rank)
+
+
+def _random_delta(seed, rank=4):
+    g = _adapters(0, rank)
+    out = jax.tree.map(lambda x: x, g)
+    key = jax.random.PRNGKey(seed)
+    for path, ab in lora.iter_modules(out):
+        k1, k2, key = jax.random.split(key, 3)
+        h = selection._get(out, path)
+        h["a"] = jax.random.normal(k1, ab["a"].shape)
+        h["b"] = jax.random.normal(k2, ab["b"].shape)
+    return out
+
+
+def _tree_max_diff(a, b):
+    return max(float(jnp.abs(jnp.asarray(x) - jnp.asarray(y)).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# codec
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("parity", [0, 1, 2])
+def test_fp32_roundtrip_bit_exact(parity):
+    delta = _random_delta(1)
+    # parity 2 (both halves) always pairs with full masks in the engine;
+    # parities 0/1 travel rank-sparse
+    if parity == 2:
+        masks, masked = selection.masks_like(delta), delta
+    else:
+        masks = selection.first_k_masks(delta, 2)
+        masked = selection.mask_delta(delta, masks, parity)
+    payload = codec.encode(masked, masks, parity, codec="fp32")
+    decoded = codec.decode(payload)
+    assert jax.tree.structure(decoded) == jax.tree.structure(masked)
+    for x, y in zip(jax.tree.leaves(masked), jax.tree.leaves(decoded)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_fp32_measured_bytes_match_closed_form():
+    """Acceptance: measured element bytes == 4 x analytic upload count."""
+    from repro.core.federation import _upload_count
+    delta = _random_delta(2)
+    for parity in (0, 1):
+        masks = selection.first_k_masks(delta, 2)
+        masked = selection.mask_delta(delta, masks, parity)
+        stats = codec.payload_stats(codec.encode(masked, masks, parity))
+        want = int(4 * _upload_count(delta, masks, parity))
+        assert stats.data_bytes == want
+        assert stats.index_bytes == 4 * stats.n_selected
+        assert stats.total_bytes == len(codec.encode(masked, masks, parity))
+
+
+def test_dense_masks_skip_index_section():
+    delta = _random_delta(3)
+    full = selection.masks_like(delta)
+    stats = codec.payload_stats(codec.encode(delta, full, 2))
+    assert stats.index_bytes == 0
+    assert stats.n_elements == sum(x.size for x in jax.tree.leaves(delta))
+
+
+def test_bf16_roundtrip_exact_on_bf16_input():
+    import ml_dtypes
+    delta = _random_delta(4)
+    masks = selection.first_k_masks(delta, 2)
+    masked = selection.mask_delta(delta, masks, 1)
+    bf = jax.tree.map(
+        lambda x: np.asarray(x).astype(ml_dtypes.bfloat16), masked)
+    decoded = codec.decode(codec.encode(bf, masks, 1, codec="bf16"))
+    for x, y in zip(jax.tree.leaves(bf), jax.tree.leaves(decoded)):
+        assert y.dtype == x.dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_int8_bounded_error_and_smaller_payload():
+    delta = _random_delta(5)
+    masks = selection.first_k_masks(delta, 2)
+    masked = selection.mask_delta(delta, masks, 1)
+    p32 = codec.encode(masked, masks, 1, codec="fp32")
+    p8 = codec.encode(masked, masks, 1, codec="int8", seed=0)
+    assert len(p8) < len(p32) / 2
+    decoded = codec.decode(p8)
+    for path, ab in lora.iter_modules(masked):
+        d = selection._get(decoded, path)
+        x = np.asarray(ab["b"], np.float32)
+        # per-rank-slot scale bound: |err| <= scale = amax/127
+        bound = np.abs(x).max(axis=-1, keepdims=True) / 127 + 1e-12
+        assert (np.abs(np.asarray(d["b"]) - x) <= bound + 1e-6).all()
+
+
+def test_int8_stochastic_rounding_unbiased():
+    rng_vals = np.linspace(-1.0, 1.0, 64, dtype=np.float32)[None, :]
+    rows = np.repeat(rng_vals, 1, axis=0)
+    est = np.zeros_like(rows)
+    n = 200
+    for s in range(n):
+        scale_b, data_b = codec._encode_rows(rows, "int8",
+                                             np.random.default_rng(s))
+        scale = np.frombuffer(scale_b, np.float32)
+        q = np.frombuffer(data_b, np.int8).reshape(rows.shape)
+        est += q.astype(np.float32) * scale[:, None]
+    np.testing.assert_allclose(est / n, rows, atol=2e-3)
+
+
+def test_dense_pytree_roundtrip_preserves_structure():
+    import ml_dtypes
+    tree = {"blocks": {"0": {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+                       "10": {"w": np.ones((2,), np.float32)}},
+            "stack": [np.float32(1.5), np.ones((3,), ml_dtypes.bfloat16)]}
+    out = codec.decode_dense(codec.encode_dense(tree))
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    assert isinstance(out["blocks"], dict)          # digit keys stay dicts
+    assert isinstance(out["stack"], list)           # lists stay lists
+    assert out["stack"][1].dtype == tree["stack"][1].dtype
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_bad_codec_and_bad_magic_raise():
+    delta = _random_delta(6)
+    masks = selection.masks_like(delta)
+    with pytest.raises(ValueError):
+        codec.encode(delta, masks, 2, codec="fp8")
+    with pytest.raises(ValueError):
+        codec.decode(b"NOPE" + b"\x00" * 16)
+
+
+# ---------------------------------------------------------------------------
+# network
+# ---------------------------------------------------------------------------
+
+
+def test_network_latency_and_bandwidth_math():
+    link = network.LinkModel(uplink_bytes_per_s=1000.0,
+                             downlink_bytes_per_s=2000.0, latency_s=0.5)
+    netw = network.SimulatedNetwork([link])
+    up = netw.uplink(0, 1000, now=1.0)
+    assert up.arrived_at == pytest.approx(1.0 + 0.5 + 1.0)
+    down = netw.downlink(0, 1000, now=0.0)
+    assert down.arrived_at == pytest.approx(0.5 + 0.5)
+    assert netw.compute_time(0, 10, step_time_s=0.1) == pytest.approx(1.0)
+
+
+def test_network_dropout_is_seeded_and_uplink_only():
+    links = [network.LinkModel(drop_prob=0.5)] * 4
+    a = network.SimulatedNetwork(links, seed=7)
+    b = network.SimulatedNetwork(links, seed=7)
+    seq_a = [a.uplink(k % 4, 100).dropped for k in range(40)]
+    seq_b = [b.uplink(k % 4, 100).dropped for k in range(40)]
+    assert seq_a == seq_b and any(seq_a) and not all(seq_a)
+    assert not any(a.downlink(k % 4, 100).dropped for k in range(40))
+
+
+def test_heterogeneous_fleet_has_stragglers():
+    fleet = network.heterogeneous_fleet(8, seed=0, straggler_frac=0.25,
+                                        slow_factor=8.0)
+    speeds = sorted(l.compute_speed for l in fleet.links)
+    assert speeds[0] == pytest.approx(1 / 8) and speeds[-1] == 1.0
+    assert sum(1 for s in speeds if s < 1.0) == 2
+
+
+# ---------------------------------------------------------------------------
+# servers
+# ---------------------------------------------------------------------------
+
+
+def _payload_for(g, delta, parity=1, k=2):
+    masks = selection.first_k_masks(g, k)
+    masked = selection.mask_delta(delta, masks, parity)
+    return codec.encode(masked, masks, parity), masked
+
+
+def test_sync_server_matches_direct_aggregation():
+    from repro.core import aggregate
+    g = _adapters(0)
+    d1, d2 = tree_sub(_random_delta(7), g), tree_sub(_random_delta(8), g)
+    p1, m1 = _payload_for(g, d1)
+    p2, m2 = _payload_for(g, d2)
+    srv = server.SyncServer("lora_a2", g)
+    srv.aggregate_round([
+        server.ClientUpdate(0, p1, 0.25, 0, 1),
+        server.ClientUpdate(1, p2, 0.75, 0, 1)])
+    want = aggregate.lora_a2(g, [m1, m2], [0.25, 0.75])
+    assert _tree_max_diff(srv.adapters, want) < 1e-6
+    assert srv.version == 1
+
+
+def test_buff_server_flushes_at_buffer_size_with_staleness_discount():
+    g = _adapters(0)
+    delta = tree_sub(_random_delta(9), g)
+    payload, masked = _payload_for(g, delta)
+    srv = server.BuffServer("lora_a2", g, buffer_size=2, staleness_alpha=1.0)
+    assert not srv.receive(server.ClientUpdate(0, payload, 1.0, 0, 1))
+    assert srv.version == 0
+    assert srv.receive(server.ClientUpdate(1, payload, 1.0, 0, 1))
+    assert srv.version == 1
+    # both fresh (staleness 0, equal weights) -> mean == the shared delta
+    from repro.utils import tree_add
+    assert _tree_max_diff(srv.adapters, tree_add(g, masked)) < 1e-6
+    # a stale update now gets discount (1+1)^-1 = 0.5 relative to fresh
+    srv.receive(server.ClientUpdate(0, payload, 1.0, 0, 1))
+    srv.receive(server.ClientUpdate(1, payload, 1.0, 1, 1))
+    assert srv.staleness_log == [0, 0, 1, 0]
+
+
+def test_async_rejects_cohort_methods():
+    g = _adapters(0)
+    with pytest.raises(ValueError):
+        server.BuffServer("flexlora", g, buffer_size=2)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end through the engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def data():
+    train, test = make_classification(0, n_classes=8, vocab=CFG.vocab_size,
+                                      seq_len=16, n_train=480, n_test=160)
+    parts = dirichlet_partition(0, train.labels, 4, alpha=0.5)
+    return train, test, parts
+
+
+def _fed(**kw):
+    base = dict(method="lora_a2", rank=2, global_rank=4, rounds=4,
+                local_epochs=1, batch_size=32, n_clients=4, eval_every=2,
+                seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+@pytest.mark.slow
+def test_lossy_codecs_run_and_upload_less(data):
+    train, test, parts = data
+    h32 = run_federated(CFG, _fed(), train, test, parts)
+    h16 = run_federated(CFG, _fed(codec="bf16"), train, test, parts)
+    h8 = run_federated(CFG, _fed(codec="int8"), train, test, parts)
+    assert h8["uploaded"][-1] < h16["uploaded"][-1] < h32["uploaded"][-1]
+    for h in (h16, h8):
+        assert all(np.isfinite(a) for a in h["acc"])
+
+
+@pytest.mark.slow
+def test_async_reaches_sync_accuracy(data):
+    """Acceptance: the async buffered server reaches within 2 accuracy
+    points of sync on the same reduced config.  The cohort is homogeneous
+    and the network ideal, so pipelining staleness (clients relaunching
+    before a flush) carries no signal — staleness_alpha=0 keeps the
+    effective step size comparable to sync."""
+    train, test, parts = data
+    cfg = dict(rounds=16, local_epochs=2, eval_every=4)
+    hs = run_federated(CFG, _fed(**cfg), train, test, parts)
+    ha = run_federated(CFG, _fed(server_mode="async", buffer_size=4,
+                                 staleness_alpha=0.0, **cfg),
+                       train, test, parts)
+    assert max(ha["staleness"]) >= 1        # async pipelining is exercised
+    assert abs(ha["acc"][-1] - hs["acc"][-1]) <= 0.02  # within 2 points
+
+
+@pytest.mark.slow
+def test_async_with_stragglers_learns_and_is_faster(data):
+    train, test, parts = data
+    fleet = network.heterogeneous_fleet(4, seed=0, straggler_frac=0.25,
+                                        slow_factor=8.0)
+    fleet2 = network.heterogeneous_fleet(4, seed=0, straggler_frac=0.25,
+                                         slow_factor=8.0)
+    hs = run_federated(CFG, _fed(rounds=4, network=fleet), train, test, parts)
+    ha = run_federated(CFG, _fed(rounds=4, server_mode="async",
+                                 buffer_size=2, network=fleet2),
+                       train, test, parts)
+    assert ha["sim_time"][-1] < hs["sim_time"][-1]
+    assert max(ha["staleness"]) >= 1           # stragglers induce staleness
+    assert all(np.isfinite(a) for a in ha["acc"])
+
+
+def test_sync_dropout_renormalizes_and_completes(data):
+    train, test, parts = data
+    drops = network.SimulatedNetwork(
+        [network.LinkModel(drop_prob=0.5) for _ in range(4)], seed=3)
+    h = run_federated(CFG, _fed(rounds=2, network=drops), train, test, parts)
+    assert all(np.isfinite(a) for a in h["acc"])
+    assert h["uploaded"][-1] > 0

@@ -9,6 +9,10 @@ from repro.core.federation import FedConfig, run_federated
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_classification
 
+# full federated sessions are the long tail of the suite; the fast CI
+# subset (-m "not slow") covers the engine via tests/test_comm.py instead
+pytestmark = pytest.mark.slow
+
 CFG = get_config("roberta-sim")
 
 

@@ -46,6 +46,7 @@ def test_model_flops_per_device_shapes():
     assert f_decode == pytest.approx(2 * f_train / (6 * 4096 * 2), rel=0.01)
 
 
+@pytest.mark.slow
 def test_serve_generate_greedy_matches_forward_argmax():
     """The serve loop's first generated token == argmax of the prefill
     logits of a plain forward (prefill/decode consistency at the driver
@@ -67,6 +68,7 @@ def test_serve_generate_greedy_matches_forward_argmax():
                                   np.asarray(want_first))
 
 
+@pytest.mark.slow
 def test_adapters_checkpoint_roundtrip_after_training():
     from repro.checkpoint import io as ckpt
     from repro.core.federation import FedConfig, run_federated

@@ -35,6 +35,7 @@ def test_blockwise_matches_direct(window):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("window", [None, 64])
 def test_blockwise_unrolled_matches_direct(window):
     from repro.models import runtime
@@ -51,6 +52,7 @@ def test_blockwise_unrolled_matches_direct(window):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
 
 
+@pytest.mark.slow
 def test_decode_ring_buffer_matches_window_attention():
     """Ring cache decode == windowed attention over the full history."""
     cfg = get_config("llama3-8b").reduced()
@@ -76,6 +78,7 @@ def test_decode_ring_buffer_matches_window_attention():
 
 @pytest.mark.parametrize("arch", ["llama3-8b", "gemma3-12b", "rwkv6-7b",
                                   "zamba2-2.7b", "kimi-k2-1t-a32b"])
+@pytest.mark.slow
 def test_prefill_decode_consistency(arch):
     """decode_step continuing from a prefill cache reproduces the logits of a
     plain sequence forward at the next position."""
@@ -115,6 +118,7 @@ def test_prefill_decode_consistency(arch):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("icd", [True, False])
 @pytest.mark.parametrize("chunk", [1, 4, 8, 16])
 def test_chunked_linear_attention_vs_oracle(icd, chunk):
@@ -187,6 +191,7 @@ def test_moe_capacity_drops_tokens():
     assert float(disp.sum()) == 4.0  # 4 of 8 kept
 
 
+@pytest.mark.slow
 def test_moe_matches_dense_computation():
     """With top_k == n_experts and ample capacity, MoE == weighted dense sum."""
     import dataclasses

@@ -1,10 +1,16 @@
-"""Quantized-uplink codec sweep: accuracy delta vs wire bytes.
+"""Codec sweeps, both directions of the wire: accuracy delta vs bytes.
 
-Runs the same reduced lora_a2 configuration through the sync transport with
-each element codec (fp32 / bf16 / int8) and reports final accuracy, the
-accuracy delta vs the lossless fp32 baseline, and measured uploaded bytes.
-The headline: int8 stochastic rounding cuts the uplink ~4x for a small
-accuracy cost; bf16 halves it for (typically) none.
+Uplink (``FedConfig.codec``): the same reduced lora_a2 configuration through
+the sync transport with each element codec (fp32 / bf16 / int8); reports
+final accuracy, the accuracy delta vs the lossless fp32 baseline, and
+measured uploaded bytes.  The headline: int8 stochastic rounding cuts the
+uplink ~4x for a small accuracy cost; bf16 halves it for (typically) none.
+
+Downlink (``FedConfig.downlink_codec``): fp32 / bf16 / delta broadcast on
+the same configuration; reports measured downloaded bytes and the accuracy
+delta vs the dense fp32 downlink.  The delta downlink must match fp32
+accuracy *exactly* (it is bit-lossless — asserted here) while downloading
+strictly fewer bytes.
 """
 import time
 
@@ -15,6 +21,7 @@ from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_classification
 
 CODECS = ("fp32", "bf16", "int8")
+DOWNLINK_CODECS = ("fp32", "bf16", "delta")
 
 
 def main(quick=False):
@@ -25,27 +32,55 @@ def main(quick=False):
                                       seq_len=16, n_train=n_train, n_test=160)
     parts = dirichlet_partition(0, train.labels, 4, alpha=0.5)
 
+    def run_one(**kw):
+        fed = FedConfig(method="lora_a2", rank=2, global_rank=4,
+                        rounds=rounds, local_epochs=1, batch_size=32,
+                        n_clients=4, eval_every=rounds, seed=0, **kw)
+        t0 = time.time()
+        hist = run_federated(cfg, fed, train, test, parts)
+        return hist, (time.time() - t0) * 1e6
+
     rows = []
     base_acc = None
     for name in CODECS:
-        fed = FedConfig(method="lora_a2", rank=2, global_rank=4,
-                        rounds=rounds, local_epochs=1, batch_size=32,
-                        n_clients=4, eval_every=rounds, seed=0, codec=name)
-        t0 = time.time()
-        hist = run_federated(cfg, fed, train, test, parts)
-        us = (time.time() - t0) * 1e6
+        hist, us = run_one(codec=name)
         acc = hist["acc"][-1]
         if name == "fp32":
             base_acc = acc
-        rows.append({"codec": name, "acc": acc,
+        rows.append({"direction": "uplink", "codec": name, "acc": acc,
                      "acc_delta_vs_fp32": acc - base_acc,
-                     "uploaded_bytes": hist["uploaded"][-1],
+                     "uplink_bytes": hist["uploaded"][-1],
+                     "downlink_bytes": hist["downloaded_cum"],
                      "wall_us": us})
+
+    dense_down = None
+    for name in DOWNLINK_CODECS:
+        if name == "fp32":   # the uplink fp32 row *is* the dense baseline
+            dense_down = rows[0]["downlink_bytes"]
+            rows.append({"direction": "downlink", "codec": "fp32",
+                         "acc": base_acc, "acc_delta_vs_fp32": 0.0,
+                         "uplink_bytes": rows[0]["uplink_bytes"],
+                         "downlink_bytes": dense_down,
+                         "wall_us": rows[0]["wall_us"]})
+            continue
+        hist, us = run_one(downlink_codec=name)
+        acc = hist["acc"][-1]
+        down = hist["downloaded_cum"]
+        assert down < dense_down, (name, down, dense_down)
+        if name == "delta":   # lossless: bit-identical trajectory
+            assert acc == base_acc, (acc, base_acc)
+        rows.append({"direction": "downlink", "codec": name, "acc": acc,
+                     "acc_delta_vs_fp32": acc - base_acc,
+                     "uplink_bytes": hist["uploaded"][-1],
+                     "downlink_bytes": down, "wall_us": us})
+
     save("codec_accuracy", rows)
     for r in rows:
-        print(f"codec/{r['codec']},{r['wall_us']:.0f},acc={r['acc']:.4f};"
-              f"delta={r['acc_delta_vs_fp32']:+.4f};"
-              f"bytes={r['uploaded_bytes']:.3e}")
+        byt = r["uplink_bytes"] if r["direction"] == "uplink" \
+            else r["downlink_bytes"]
+        print(f"codec/{r['direction']}_{r['codec']},{r['wall_us']:.0f},"
+              f"acc={r['acc']:.4f};delta={r['acc_delta_vs_fp32']:+.4f};"
+              f"bytes={byt:.3e}")
     return rows
 
 

@@ -15,6 +15,11 @@ the lossless fp32 codec must equal 4 bytes x the closed form exactly.
 
 Validates: ours < FL+LoRA at equal budget; rank-1 LoRA-A² on RoBERTa-base
 uploads <0.2% of full fine-tuning (paper's 99.8% reduction claim).
+
+Downlink: the dense-broadcast closed form (all adapter elements x element
+width) is cross-checked against the measured Broadcaster payload for the
+fp32 and bf16 downlink codecs; the delta downlink is data-dependent and is
+measured in benchmarks/codec_accuracy.py instead.
 """
 import jax
 import numpy as np
@@ -65,6 +70,36 @@ def measured_lora_a2_bytes(cfg, rank):
     return out
 
 
+def downlink_per_round(cfg, rank, codec="fp32"):
+    """Dense broadcast closed form: every adapter element of both halves,
+    at the downlink codec's element width (fp32 4 B, bf16 2 B).  The
+    'delta' downlink has no closed form — it is measured per round (see
+    benchmarks/codec_accuracy.py downlink sweep)."""
+    from repro.comm.codec import ELEMENT_BYTES
+    spec = lora.lora_spec(cfg)
+    both = sum((1 if g == "shared" else cfg.n_periods) * rank * (di + do)
+               for (g, _, _), (di, do) in spec.items())
+    return both * ELEMENT_BYTES[codec]
+
+
+def downlink_crosscheck(arch="roberta-base", rank=8):
+    """Assert the dense-broadcast closed form == the Broadcaster's measured
+    payload data bytes for fp32 and bf16."""
+    from repro.comm import codec as C
+    from repro.comm.server import Broadcaster
+    cfg = get_config(arch)
+    adapters = lora.init_adapters(cfg, jax.random.PRNGKey(0), rank)
+    out = {"arch": arch, "rank": rank, "downlink": True}
+    for name in ("fp32", "bf16"):
+        payload, _ = Broadcaster(name).payload_for(0, adapters, 0)
+        measured = C.payload_stats(payload).data_bytes
+        want = downlink_per_round(cfg, rank, name)
+        assert measured == want, (name, measured, want)
+        out[f"{name}_bytes"] = measured
+    out["match"] = True
+    return out
+
+
 def crosscheck(arch="roberta-base", rank=8):
     """Assert the closed form == measured codec payload for fp32.
 
@@ -84,7 +119,8 @@ def crosscheck(arch="roberta-base", rank=8):
 
 
 def main(quick=False):
-    rows = [crosscheck("distilbert" if quick else "roberta-base", rank=4)]
+    arch0 = "distilbert" if quick else "roberta-base"
+    rows = [crosscheck(arch0, rank=4), downlink_crosscheck(arch0, rank=4)]
     archs = ["roberta-base"] if quick else ARCHS
     for arch in archs:
         cfg = get_config(arch)
@@ -107,6 +143,11 @@ def main(quick=False):
                 rows.append(row)
     save("comm_cost", rows)
     for r in rows:
+        if r.get("downlink"):
+            print(f"comm/downlink_crosscheck_{r['arch']}_r{r['rank']},0,"
+                  f"fp32={r['fp32_bytes']:.0f}B;bf16={r['bf16_bytes']:.0f}B;"
+                  f"match={r['match']}")
+            continue
         if "match" in r:
             print(f"comm/crosscheck_{r['arch']}_r{r['rank']},0,"
                   f"measured={r['measured_bytes']:.0f}B;match={r['match']}")

@@ -30,6 +30,10 @@ def main():
     ap.add_argument("--rank", type=int, default=2)
     ap.add_argument("--codec", default="fp32", choices=["fp32", "bf16", "int8"],
                     help="uplink element codec (see repro.comm.codec)")
+    ap.add_argument("--downlink", default="fp32",
+                    choices=["fp32", "bf16", "delta"],
+                    help="server→client broadcast codec (delta = only rank "
+                         "slots changed since the client's last fetch)")
     ap.add_argument("--server", default="sync", choices=["sync", "async"],
                     help="async = FedBuff-style buffered aggregation")
     ap.add_argument("--stragglers", action="store_true",
@@ -58,7 +62,8 @@ def main():
     fed = FedConfig(method="lora_a2", rank=args.rank, global_rank=8,
                     rounds=rounds, local_epochs=2, batch_size=16,
                     n_clients=args.clients, eval_every=max(1, rounds // 4),
-                    codec=args.codec, server_mode=args.server, network=fleet)
+                    codec=args.codec, downlink_codec=args.downlink,
+                    server_mode=args.server, network=fleet)
     t0 = time.time()
     hist = run_federated(cfg, fed, train, test, parts)
     for r, acc, up, st in zip(hist["round"], hist["acc"], hist["uploaded"],
@@ -67,7 +72,7 @@ def main():
               f"  sim_t {st:.2f}s")
     print(f"wall: {time.time()-t0:.1f}s  "
           f"downlink {hist['downloaded_cum']/1e6:.1f} MB  codec={args.codec}"
-          f"  server={args.server}")
+          f"  downlink_codec={args.downlink}  server={args.server}")
 
     ckpt.save(args.out, hist["adapters"], metadata={"rounds": rounds,
                                                     "arch": cfg.name})

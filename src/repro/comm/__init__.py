@@ -1,16 +1,20 @@
 """repro.comm — the communication subsystem for the federated loop.
 
-Three layers (see README "repro.comm" section):
+Four layers (see README "repro.comm" section):
 
-  codec.py    wire-format codecs: rank-sparse packing of masked adapter
-              deltas with pluggable element codecs (fp32 / bf16 / int8)
-  network.py  simulated per-client links (bandwidth / latency / dropout)
-              and the round clock
-  server.py   server endpoints: synchronous round server and a
-              FedBuff-style async buffered server
+  codec.py     wire-format codecs: rank-sparse packing of masked adapter
+               deltas with pluggable element codecs (fp32 / bf16 / int8)
+  pipeline.py  the uplink composition clip → quantize → privatize → encode
+               (DP noise is discrete on the int8 grid, after quantization)
+  network.py   simulated per-client links (bandwidth / latency / dropout),
+               per-direction traffic accounting, and the round clock
+  server.py    server endpoints: synchronous round server, a FedBuff-style
+               async buffered server, and the downlink Broadcaster
+               (fp32 / bf16 / delta server→client codecs)
 
 Every client→server and server→client exchange in core/federation.py is
-routed through these layers, so `history["uploaded"]` is measured wire
-bytes, not an analytic estimate.
+routed through these layers, so `history["uploaded"]` and
+`history["downloaded_cum"]` are measured wire bytes, not analytic
+estimates.
 """
-from repro.comm import codec, network, server  # noqa: F401
+from repro.comm import codec, network, pipeline, server  # noqa: F401

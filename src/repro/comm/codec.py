@@ -24,6 +24,14 @@ Element codecs:
 
 ``encode_dense``/``decode_dense`` handle arbitrary pytrees (the full-FT
 baseline uploads whole parameter trees, not rank-structured adapters).
+
+The int8 path is split into ``quantize`` (float rows -> integer codes +
+grid scales, a mutable ``QuantizedUpload``) and ``pack`` (clamp + bytes)
+so the upload pipeline (comm/pipeline.py) can privatize *on the grid*
+between the two — ``encode`` composes them for the non-DP path.
+``apply_update`` is the delta-downlink inverse: it overwrites only the
+slots a payload carries onto a copy of a base tree (see comm/server.py
+Broadcaster).
 """
 from __future__ import annotations
 
@@ -47,6 +55,7 @@ ELEMENT_CODECS = ("fp32", "bf16", "int8")
 ELEMENT_BYTES = {"fp32": 4, "bf16": 2, "int8": 1}
 INDEX_BYTES = 4   # one uint32 per selected rank slot
 SCALE_BYTES = 4   # one fp32 scale per selected slot per half (int8 only)
+INT8_QMAX = 127   # symmetric int8 grid: codes in [-127, 127]
 PARITY_HALVES = {0: "a", 1: "b", 2: "ab"}
 
 
@@ -72,19 +81,36 @@ def _check_codec(codec):
 # ---------------------------------------------------------------------------
 
 
+def _quantize_rows(rows, rng, grid=None):
+    """Stochastic-round (nsel, dim) float rows onto the int8 grid.
+
+    grid pins a fixed per-slot step (the DP pipeline uses clip_norm/127 —
+    the default per-slot amax/127 scale is data-dependent and would leak);
+    returns (q int32 codes, unclamped; scale fp32 (nsel,))."""
+    x = np.asarray(rows, np.float32)
+    if grid is None:
+        amax = np.abs(x).max(axis=1) if x.size else np.zeros((0,), np.float32)
+        scale = (amax / INT8_QMAX).astype(np.float32)
+    else:
+        scale = np.full((x.shape[0],), grid, np.float32)
+    safe = np.where(scale > 0, scale, 1.0)[:, None]
+    q = np.floor(x / safe + rng.random(x.shape, np.float32)).astype(np.int32)
+    return q, scale
+
+
+def _pack_rows(q, scale):
+    """Clamp integer codes to the int8 range and serialize one wire row."""
+    q8 = np.clip(q, -INT8_QMAX, INT8_QMAX).astype(np.int8)
+    return np.ascontiguousarray(scale, np.float32).tobytes(), q8.tobytes()
+
+
 def _encode_rows(rows, codec, rng):
     """rows: (nsel, dim) float array -> (scale_bytes, data_bytes)."""
     if codec == "fp32":
         return b"", np.ascontiguousarray(rows, np.float32).tobytes()
     if codec == "bf16":
         return b"", np.ascontiguousarray(rows).astype(BF16).tobytes()
-    x = np.asarray(rows, np.float32)
-    amax = np.abs(x).max(axis=1) if x.size else np.zeros((0,), np.float32)
-    scale = (amax / 127.0).astype(np.float32)
-    safe = np.where(scale > 0, scale, 1.0)[:, None]
-    q = np.floor(x / safe + rng.random(x.shape, np.float32))
-    q = np.clip(q, -127, 127).astype(np.int8)
-    return scale.tobytes(), q.tobytes()
+    return _pack_rows(*_quantize_rows(rows, rng))
 
 
 def _decode_rows(body, off, nsel, dim, codec):
@@ -108,17 +134,10 @@ def _decode_rows(body, off, nsel, dim, codec):
 # ---------------------------------------------------------------------------
 
 
-def encode(delta, masks, parity, codec="fp32", seed=0):
-    """Pack a (masked) adapter delta into wire bytes.
-
-    masks: {path_tuple: 0/1 rank mask shaped lead+(r,)} as produced by
-    core/selection.py.  parity selects which halves travel (0 -> 'a',
-    1 -> 'b', 2 -> both).  seed drives int8 stochastic rounding.
-    """
-    _check_codec(codec)
+def _wire_modules(delta, masks, parity):
+    """Yield (module header dict, idx uint32 array or None when dense,
+    [selected (nsel, dim) rows per travelling half]) in wire order."""
     halves = PARITY_HALVES[parity]
-    rng = np.random.default_rng(seed)
-    mods, body = [], []
     for path, ab in iter_modules(delta):
         a, b = np.asarray(ab["a"]), np.asarray(ab["b"])
         lead = a.shape[:-2]
@@ -129,23 +148,85 @@ def encode(delta, masks, parity, codec="fp32", seed=0):
         m = np.asarray(masks[path], np.float32).reshape(n_slots)
         idx = np.nonzero(m > 0)[0].astype(np.uint32)
         dense = idx.size == n_slots
-        mods.append({"p": SEP.join(path), "lead": list(lead), "din": d_in,
-                     "r": r, "dout": d_out, "nsel": int(idx.size),
-                     "dense": dense, "dt": a.dtype.name})
-        if not dense:
-            body.append(idx.tobytes())
+        mod = {"p": SEP.join(path), "lead": list(lead), "din": d_in,
+               "r": r, "dout": d_out, "nsel": int(idx.size),
+               "dense": dense, "dt": a.dtype.name}
         sel = slice(None) if dense else idx
+        rows = []
         if "a" in halves:
-            cols = a.reshape(L, d_in, r).transpose(0, 2, 1).reshape(n_slots, d_in)
-            s, d = _encode_rows(cols[sel], codec, rng)
-            body += [s, d]
+            cols = a.reshape(L, d_in, r).transpose(0, 2, 1).reshape(n_slots,
+                                                                    d_in)
+            rows.append(cols[sel])
         if "b" in halves:
-            rows = b.reshape(L, r, d_out).reshape(n_slots, d_out)
-            s, d = _encode_rows(rows[sel], codec, rng)
-            body += [s, d]
+            rws = b.reshape(L, r, d_out).reshape(n_slots, d_out)
+            rows.append(rws[sel])
+        yield mod, (None if dense else idx), rows
+
+
+def _assemble(codec, halves, mods, body):
     header = json.dumps({"v": 1, "codec": codec, "halves": halves,
                          "modules": mods}, separators=(",", ":")).encode()
     return MAGIC + struct.pack("<I", len(header)) + header + b"".join(body)
+
+
+@dataclasses.dataclass
+class QuantizedUpload:
+    """An int8 upload after the quantize stage, before packing: integer
+    codes + per-slot grid scales, mutable so a DP stage can add discrete
+    noise *on the grid* (core/dp.py privatize_quantized) before the bytes
+    are frozen by ``pack``."""
+    halves: str
+    modules: list   # header dicts in wire order
+    indices: list   # per module: uint32 idx array, or None when dense
+    rows: list      # per module: [[q int32 (nsel, dim), scale (nsel,)], ...]
+
+
+def quantize(delta, masks, parity, seed=0, grid=None):
+    """Pipeline stage: stochastic-round the selected rows onto the int8
+    grid without packing.  grid (optional) pins a fixed, data-independent
+    per-slot step — required under DP, where the default amax-derived scale
+    would itself leak the data."""
+    rng = np.random.default_rng(seed)
+    mods, idxs, qrows = [], [], []
+    for mod, idx, rows in _wire_modules(delta, masks, parity):
+        mods.append(mod)
+        idxs.append(idx)
+        qrows.append([list(_quantize_rows(r, rng, grid)) for r in rows])
+    return QuantizedUpload(PARITY_HALVES[parity], mods, idxs, qrows)
+
+
+def pack(qup: QuantizedUpload) -> bytes:
+    """Clamp a QuantizedUpload's codes to int8 and assemble the payload."""
+    body = []
+    for idx, mrows in zip(qup.indices, qup.rows):
+        if idx is not None:
+            body.append(idx.tobytes())
+        for q, scale in mrows:
+            s, d = _pack_rows(q, scale)
+            body += [s, d]
+    return _assemble("int8", qup.halves, qup.modules, body)
+
+
+def encode(delta, masks, parity, codec="fp32", seed=0):
+    """Pack a (masked) adapter delta into wire bytes.
+
+    masks: {path_tuple: 0/1 rank mask shaped lead+(r,)} as produced by
+    core/selection.py.  parity selects which halves travel (0 -> 'a',
+    1 -> 'b', 2 -> both).  seed drives int8 stochastic rounding (any value
+    np.random.default_rng accepts, including SeedSequence entropy lists).
+    """
+    _check_codec(codec)
+    if codec == "int8":
+        return pack(quantize(delta, masks, parity, seed=seed))
+    mods, body = [], []
+    for mod, idx, rows in _wire_modules(delta, masks, parity):
+        mods.append(mod)
+        if idx is not None:
+            body.append(idx.tobytes())
+        for rws in rows:
+            s, d = _encode_rows(rws, codec, None)
+            body += [s, d]
+    return _assemble(codec, PARITY_HALVES[parity], mods, body)
 
 
 def _parse_header(payload):
@@ -191,6 +272,51 @@ def decode(payload):
     return tree
 
 
+def apply_update(base, payload):
+    """Delta-downlink receive path: overwrite the rank slots carried by
+    ``payload`` with the payload's values on a copy of ``base``; slots (and
+    halves) the payload does not carry keep base's bits exactly.  With the
+    fp32 element codec this reconstructs the sender's state bit-exactly —
+    the payload rows are *new values*, not differences, so no float
+    cancellation error accrues across repeated delta downlinks."""
+    header, body = _parse_header(payload)
+    codec, halves = header["codec"], header["halves"]
+    out, off = {}, 0
+    for e in header["modules"]:
+        lead = tuple(e["lead"])
+        d_in, r, d_out, nsel = e["din"], e["r"], e["dout"], e["nsel"]
+        L = int(np.prod(lead, dtype=np.int64)) if lead else 1
+        n_slots = L * r
+        if e["dense"]:
+            idx = np.arange(n_slots)
+        else:
+            idx = np.frombuffer(body, np.uint32, nsel, off)
+            off += nsel * INDEX_BYTES
+        node = base
+        parts = e["p"].split(SEP)
+        for p in parts:
+            node = node[p]
+        a = np.array(np.asarray(node["a"]))
+        b = np.array(np.asarray(node["b"]))
+        if "a" in halves:
+            rows, off = _decode_rows(body, off, nsel, d_in, codec)
+            aslots = a.reshape(L, d_in, r).transpose(0, 2, 1) \
+                      .reshape(n_slots, d_in).copy()
+            aslots[idx] = rows.astype(a.dtype)
+            a = aslots.reshape(L, r, d_in).transpose(0, 2, 1) \
+                      .reshape(lead + (d_in, r))
+        if "b" in halves:
+            rows, off = _decode_rows(body, off, nsel, d_out, codec)
+            bslots = b.reshape(L, r, d_out).reshape(n_slots, d_out).copy()
+            bslots[idx] = rows.astype(b.dtype)
+            b = bslots.reshape(lead + (r, d_out))
+        dest = out
+        for p in parts[:-1]:
+            dest = dest.setdefault(p, {})
+        dest[parts[-1]] = {"a": a, "b": b}
+    return out
+
+
 def payload_stats(payload):
     """Per-section byte accounting, computed from the header alone.  Works
     for both rank-sparse adapter payloads and dense pytree payloads."""
@@ -202,6 +328,7 @@ def payload_stats(payload):
                    else 1 for e in header["modules"])
         scale_b = len(header["modules"]) * SCALE_BYTES if codec == "int8" else 0
         header_b = len(payload) - len(body)
+        assert header_b + scale_b + n_el * ebytes == len(payload)
         return PayloadStats(total_bytes=len(payload), header_bytes=header_b,
                             index_bytes=0, scale_bytes=scale_b,
                             data_bytes=n_el * ebytes,

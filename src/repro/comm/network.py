@@ -3,7 +3,9 @@
 Each client k has a LinkModel (uplink/downlink bandwidth, latency, uplink
 drop probability, relative compute speed).  SimulatedNetwork turns payload
 sizes into Transmission records with simulated arrival times; the engine
-never sleeps — time is a number the server advances.
+never sleeps — time is a number the server advances.  Every transfer is
+also tallied per client and direction (``traffic()``), so downlink bytes
+are measured at the transport, not inferred.
 
 This expresses straggler and partial-delivery scenarios beyond what the
 ``participation`` knob alone can: a client may participate every round yet
@@ -58,6 +60,8 @@ class SimulatedNetwork:
     def __init__(self, links: Sequence[LinkModel], seed: int = 0):
         self.links = list(links)
         self._rng = np.random.default_rng(seed)
+        self.bytes_up = np.zeros(len(self.links))
+        self.bytes_down = np.zeros(len(self.links))
 
     def __len__(self):
         return len(self.links)
@@ -71,16 +75,28 @@ class SimulatedNetwork:
                             None if dropped else float(now) + dt)
 
     def uplink(self, k, nbytes, now=0.0) -> Transmission:
+        self.bytes_up[k] += nbytes
         return self._xfer(k, nbytes, now, self.links[k].uplink_bytes_per_s,
                           can_drop=True)
 
     def downlink(self, k, nbytes, now=0.0) -> Transmission:
         # server broadcast is modeled reliable; only uplinks drop
+        self.bytes_down[k] += nbytes
         return self._xfer(k, nbytes, now, self.links[k].downlink_bytes_per_s,
                           can_drop=False)
 
     def compute_time(self, k, n_steps, step_time_s=0.01) -> float:
         return n_steps * step_time_s / self.links[k].compute_speed
+
+    def traffic(self) -> dict:
+        """Measured bytes offered to each link, per direction.  Dropped
+        uplink bytes still count — they were transmitted.  The engine's
+        history["uploaded_cum"]/["downloaded_cum"] must agree with the
+        totals when it owns this network (asserted in tests)."""
+        return {"uplink_bytes": self.bytes_up.copy(),
+                "downlink_bytes": self.bytes_down.copy(),
+                "total_up": float(self.bytes_up.sum()),
+                "total_down": float(self.bytes_down.sum())}
 
 
 def ideal_network(n_clients: int) -> SimulatedNetwork:

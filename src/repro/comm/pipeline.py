@@ -1,0 +1,138 @@
+"""Composable client→server upload pipeline: clip → quantize → privatize →
+encode.
+
+The stage *order* is the point (ROADMAP "DP × quantized uploads"): the
+pre-pipeline engine privatized the masked delta first and then handed it to
+the int8 codec, whose stochastic rounding re-rounded the calibrated Laplace
+noise — silently breaking the epsilon-DP claim under ``codec="int8"``.
+Here the int8 path quantizes first and then draws **discrete Laplace
+(two-sided geometric) noise directly on the int8 grid**, so the payload
+decodes to exactly the distribution family the mechanism was calibrated
+for.  Stage by stage:
+
+    clip        L1-clip the masked delta to the DP clip bound C
+                (skipped when DP is off)
+    quantize    int8 only: stochastic-round onto the wire grid.  Under DP
+                the grid step is pinned to C/127 — data-independent, since
+                the usual per-slot amax scale would itself leak — and the
+                L1 clip guarantees every coordinate fits the int8 range.
+    privatize   fp32/bf16: continuous Laplace(b = C/epsilon) on the tree
+                (fp32 addition, sum cast to the leaf dtype).
+                int8: DLap(t) integer noise with t = b/grid = 127/epsilon
+                grid units added to the codes; the later int8 clamp is
+                post-processing.  (skipped when DP is off)
+    encode      freeze bytes: ``codec.pack`` for a quantized upload,
+                ``codec.encode`` otherwise.
+
+Each stage is a plain ``UploadState -> UploadState`` function;
+``build_pipeline`` returns the stage tuple so tests can run and inspect any
+prefix, and ``encode_upload`` is the one-call engine entry point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.comm import codec as wire
+from repro.core import dp as dpmod
+
+
+@dataclasses.dataclass(frozen=True)
+class DPSpec:
+    """Per-round DP calibration: Laplace scale b = clip_norm / epsilon."""
+    epsilon: float
+    clip_norm: float
+
+
+@dataclasses.dataclass
+class UploadState:
+    """Carrier threaded through the stages.  ``tree`` is the real-valued
+    delta until quantize; ``quantized`` is the int8 grid representation
+    once it exists; ``payload`` the frozen bytes after encode."""
+    tree: Any
+    masks: Any
+    parity: int
+    codec: str
+    seed: Any
+    key: Any = None                  # jax PRNG key driving the noise
+    quantized: Optional[wire.QuantizedUpload] = None
+    payload: Optional[bytes] = None
+
+
+Stage = Callable[[UploadState], UploadState]
+
+
+def _noise_rng(key) -> np.random.Generator:
+    """Deterministic numpy Generator for the discrete mechanism, derived
+    from the jax noise key so sync trajectories stay reproducible."""
+    ints = np.asarray(jax.random.randint(key, (4,), 0, np.iinfo(np.int32).max))
+    return np.random.default_rng(ints.tolist())
+
+
+def clip_stage(dp: DPSpec) -> Stage:
+    def clip(s: UploadState) -> UploadState:
+        s.tree = dpmod.clip_tree(s.tree, dp.clip_norm)
+        return s
+    return clip
+
+
+def quantize_stage(dp: Optional[DPSpec] = None) -> Stage:
+    def quantize(s: UploadState) -> UploadState:
+        if s.codec == "int8":
+            grid = dp.clip_norm / wire.INT8_QMAX if dp is not None else None
+            s.quantized = wire.quantize(s.tree, s.masks, s.parity,
+                                        seed=s.seed, grid=grid)
+        return s
+    return quantize
+
+
+def privatize_stage(dp: DPSpec) -> Stage:
+    def privatize(s: UploadState) -> UploadState:
+        if s.quantized is not None:   # int8: discrete noise on the grid
+            s.quantized = dpmod.privatize_quantized(
+                s.quantized, _noise_rng(s.key),
+                epsilon=dp.epsilon, clip_norm=dp.clip_norm)
+        else:                         # fp32/bf16: continuous mechanism
+            s.tree = dpmod.add_laplace(s.tree, s.key,
+                                       dp.clip_norm / dp.epsilon)
+        return s
+    return privatize
+
+
+def encode_stage() -> Stage:
+    def encode(s: UploadState) -> UploadState:
+        if s.quantized is not None:
+            s.payload = wire.pack(s.quantized)
+        else:
+            s.payload = wire.encode(s.tree, s.masks, s.parity,
+                                    codec=s.codec, seed=s.seed)
+        return s
+    return encode
+
+
+def build_pipeline(codec: str, dp: Optional[DPSpec] = None) -> tuple:
+    """The stage tuple for one upload.  Without DP this degenerates to
+    quantize+encode == ``codec.encode`` byte-for-byte."""
+    stages = []
+    if dp is not None:
+        stages.append(clip_stage(dp))
+    stages.append(quantize_stage(dp))
+    if dp is not None:
+        stages.append(privatize_stage(dp))
+    stages.append(encode_stage())
+    return tuple(stages)
+
+
+def encode_upload(masked, masks, parity, *, codec="fp32", seed=0,
+                  dp: Optional[DPSpec] = None, key=None) -> bytes:
+    """Run the full pipeline on one masked delta and return the payload."""
+    if dp is not None and key is None:
+        raise ValueError("DP upload needs a PRNG key for the noise")
+    state = UploadState(tree=masked, masks=masks, parity=parity,
+                        codec=codec, seed=seed, key=key)
+    for stage in build_pipeline(codec, dp):
+        state = stage(state)
+    return state.payload

@@ -11,16 +11,26 @@ BuffServer   — FedBuff-style async buffered aggregation (Nguyen et al.,
                supported async (fl_lora / ffa_lora / lora_a2) — flexlora
                and hetlora need the full synchronized cohort.
 
-Both decode payloads through comm/codec.py; neither ever sees a client's
-in-memory pytree directly.
+Broadcaster — the server→client downlink under ``FedConfig.downlink_codec``
+               (fp32 | bf16 | delta).  ``delta`` ships only the rank slots
+               that changed since the client's last fetch, versioned
+               per-client on the sync path and per-buffer-generation on the
+               async path.
+
+Both servers decode payloads through comm/codec.py; neither ever sees a
+client's in-memory pytree directly.  Symmetrically, clients only ever see
+the Broadcaster's *decoded* payload, never the server's pytree.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import List, Optional, Sequence
 
+import numpy as np
+
 from repro.comm import codec
-from repro.core import aggregate
+from repro.core import aggregate, selection
+from repro.core.lora import iter_modules
 from repro.utils import tree_add, tree_scale, tree_weighted_sum
 
 ASYNC_METHODS = ("fl_lora", "ffa_lora", "lora_a2")
@@ -36,6 +46,88 @@ class ClientUpdate:
     parity: int            # which half the delta moves
     sent_at: float = 0.0
     arrived_at: float = 0.0
+
+
+DOWNLINK_CODECS = ("fp32", "bf16", "delta")
+
+
+def _changed_slot_masks(old, new):
+    """Per-half {path: 0/1 rank mask} of slots whose bits differ between two
+    adapter trees.  Bitwise inequality (NaN counts as changed) guarantees
+    that overwriting exactly these slots reproduces ``new`` bit-exactly."""
+    ma, mb, any_a, any_b = {}, {}, False, False
+    for path, ab in iter_modules(new):
+        o = selection._get(old, path)
+        ca = (np.asarray(ab["a"]) != np.asarray(o["a"])).any(axis=-2)
+        cb = (np.asarray(ab["b"]) != np.asarray(o["b"])).any(axis=-1)
+        ma[path] = ca.astype(np.float32)
+        mb[path] = cb.astype(np.float32)
+        any_a = any_a or bool(ca.any())
+        any_b = any_b or bool(cb.any())
+    return ma, mb, any_a, any_b
+
+
+class Broadcaster:
+    """Server→client downlink endpoint (``FedConfig.downlink_codec``).
+
+    fp32 / bf16   dense payload of the global adapters, encoded once per
+                  global version and shared by every fetcher of that
+                  version (bf16 halves the downlink; the client state
+                  rounds through bf16).
+    delta         per-client: only the rank slots whose values changed
+                  since the client's last fetch travel, as fp32 rows plus
+                  u32 slot indices.  The first fetch is a dense fp32
+                  payload.  Rows carry *new values* (not differences), so
+                  reconstruction by overwrite is bit-identical to the dense
+                  fp32 broadcast — the delta path is lossless.
+
+    ``payload_for`` is keyed by the server's global version: on the sync
+    path that is one snapshot per round, on the async path one per buffer
+    flush (generation), which is what makes the per-version dense cache and
+    the per-client delta baselines correct in both modes.
+    """
+
+    def __init__(self, downlink_codec: str = "fp32"):
+        if downlink_codec not in DOWNLINK_CODECS:
+            raise ValueError(f"unknown downlink codec {downlink_codec!r}; "
+                             f"want one of {DOWNLINK_CODECS}")
+        self.codec = downlink_codec
+        self._dense_cache = None   # (version, payload, decoded state)
+        self._seen = {}            # delta: client -> last reconstructed state
+
+    def payload_for(self, client_id, adapters, version):
+        """-> (payload bytes, the state the client decodes from them)."""
+        if self.codec != "delta":
+            return self._dense(adapters, version, self.codec)
+        prev = self._seen.get(client_id)
+        if prev is None:
+            payload, state = self._dense(adapters, version, "fp32")
+        else:
+            payload, state = self._delta(prev, adapters)
+        self._seen[client_id] = state
+        return payload, state
+
+    def _dense(self, adapters, version, codec_name):
+        if self._dense_cache is None or self._dense_cache[0] != version:
+            masks = selection.masks_like(adapters)
+            payload = codec.encode(adapters, masks, 2, codec=codec_name)
+            self._dense_cache = (version, payload, codec.decode(payload))
+        _, payload, state = self._dense_cache
+        return payload, state
+
+    def _delta(self, prev, adapters):
+        ma, mb, any_a, any_b = _changed_slot_masks(prev, adapters)
+        if any_a and any_b:
+            parity = 2
+            masks = {p: np.maximum(ma[p], mb[p]) for p in ma}
+        elif any_a:
+            parity, masks = 0, ma
+        else:
+            # nothing changed -> header-only payload (nsel == 0 everywhere);
+            # the client still fetches, so the bytes are still accounted
+            parity, masks = 1, mb
+        payload = codec.encode(adapters, masks, parity, codec="fp32")
+        return payload, codec.apply_update(prev, payload)
 
 
 class SyncServer:

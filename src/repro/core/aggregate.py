@@ -60,15 +60,27 @@ def flexlora(global_adapters, client_adapters, weights, rank, lora_alpha_scale=1
 def hetlora(global_adapters, deltas, weights, client_ranks, gamma=0.99):
     """HetLoRA (Cho et al., 2023): clients train truncated-rank adapters;
     zero-padding aligns them for aggregation (deltas outside a client's rank
-    are zero by construction here).  A sparsity-decay factor gamma shrinks
-    the tail ranks each round (self-pruning)."""
-    r_max = int(max(client_ranks))
+    are zero by construction here).  Sparsity decay (self-pruning): each
+    round, rank slot j shrinks by gamma in proportion to the aggregation
+    weight of the clients whose truncation rank excludes it,
+
+        decay_j = gamma ** sum_k w_k * 1[r_k <= j]
+
+    so slots beyond every client's rank decay by the full gamma, slots every
+    client trains don't decay at all, and a heterogeneous cohort gradually
+    prunes the tail its small-rank members never update.  (The previous
+    ``arange(r) < max(client_ranks)`` gate was a no-op whenever the global
+    rank equalled the largest client rank — i.e. in every default config.)"""
+    w = np.asarray(list(weights), np.float64)
+    w = w / w.sum()
+    ranks = np.asarray(list(client_ranks), np.int64)[:, None]
     agg = tree_weighted_sum(deltas, list(weights))
     new = tree_add(global_adapters, agg)
     out = jax.tree.map(lambda x: x, new)
     for path, ab in iter_modules(new):
         r = ab["a"].shape[-1]
-        decay = jnp.where(jnp.arange(r) < r_max, 1.0, gamma)
+        untrained_w = (w[:, None] * (ranks <= np.arange(r)[None, :])).sum(0)
+        decay = jnp.asarray(gamma ** untrained_w, ab["a"].dtype)
         holder = _get(out, path)
         holder["a"] = ab["a"] * decay           # (..., d_in, r) * (r,)
         holder["b"] = ab["b"] * decay[..., :, None]

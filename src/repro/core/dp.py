@@ -1,30 +1,99 @@
 """Differential privacy for client uploads (paper §5.5, following Ryu et al.
-2022): L2 clipping + Laplace mechanism on the uploaded delta."""
+2022): L1 clipping + a Laplace mechanism on the uploaded delta.
+
+Two mechanisms, one calibration (b = clip_norm / epsilon):
+
+* continuous (fp32/bf16 codecs): clip the delta to L1 <= C, add i.i.d.
+  Laplace(0, b) in fp32, cast the *sum* to the leaf dtype.
+* discrete (int8 codec): the upload pipeline (comm/pipeline.py) quantizes
+  the clipped delta onto a fixed grid of step s first, then
+  ``privatize_quantized`` adds discrete Laplace noise — a two-sided
+  geometric with P(K = k) ∝ exp(-|k| / t), t = b / s grid units — directly
+  to the integer codes.  The encoded payload therefore carries exactly the
+  calibrated distribution; the codec never stochastically re-rounds noise
+  (that re-rounding was the pre-pipeline bug this module's ordering fixes).
+
+Adjacency and sensitivity: clipping bounds each client's contribution to
+L1 <= C, so under add/remove-one adjacency the round's L1 sensitivity is C
+and scale b = C / epsilon gives epsilon-DP *for the transmitted values*.
+That is the full-payload guarantee only when the rank selection is
+data-independent (ffa_lora / fl_lora / hetlora's static masks); lora_a2's
+uploaded rank-index section is a data-dependent top-k and travels
+unprivatized — a documented side-channel (ROADMAP).  (The previous
+revision clipped
+the *L2* norm, which under-noises by up to sqrt(d) for the L1-calibrated
+Laplace mechanism.)  For the discrete path, stochastic rounding adds at
+most one grid unit of sensitivity slop per changed coordinate; we calibrate
+t to the analytic b/s and document the slop rather than inflate t.  The
+int8 range clamp in comm/codec.py happens *after* noise addition, so it is
+post-processing and cannot weaken the guarantee.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.utils import tree_count, tree_l2, tree_scale
+from repro.utils import tree_l1, tree_scale
 
 
 def clip_tree(tree, clip_norm):
-    norm = tree_l2(tree)
+    """Scale the tree so its global **L1** norm is <= clip_norm."""
+    norm = tree_l1(tree)
     factor = jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))
     return tree_scale(tree, factor)
 
 
 def add_laplace(tree, key, scale):
-    """i.i.d. Laplace(0, scale) noise on every leaf."""
+    """i.i.d. Laplace(0, scale) noise on every leaf.  Noise is drawn and
+    summed in fp32; only the *sum* is cast back to the leaf dtype — casting
+    the noise itself first (the old path) rounds bf16 noise before addition
+    and perturbs the calibrated scale."""
     leaves, treedef = jax.tree.flatten(tree)
     keys = jax.random.split(key, len(leaves))
-    noisy = [l + jax.random.laplace(k, l.shape, jnp.float32).astype(l.dtype) * scale
+    noisy = [(l.astype(jnp.float32)
+              + jax.random.laplace(k, l.shape, jnp.float32) * scale
+              ).astype(l.dtype)
              for l, k in zip(leaves, keys)]
     return jax.tree.unflatten(treedef, noisy)
 
 
 def privatize(tree, key, *, epsilon, clip_norm):
-    """Clip to L2<=C and add Laplace noise with b = C / epsilon (per-round
-    sensitivity C under replace-one adjacency)."""
+    """Continuous mechanism: clip to L1 <= C and add Laplace noise with
+    b = C / epsilon (per-round L1 sensitivity C, add/remove-one adjacency)."""
     clipped = clip_tree(tree, clip_norm)
     return add_laplace(clipped, key, clip_norm / epsilon)
+
+
+# ---------------------------------------------------------------------------
+# discrete mechanism (int8 uplink; see comm/pipeline.py for the ordering)
+# ---------------------------------------------------------------------------
+
+
+def discrete_laplace(rng, shape, t):
+    """Discrete Laplace DLap(t) on the integers: P(K = k) ∝ exp(-|k| / t),
+    sampled as the difference of two geometrics with success probability
+    p = 1 - exp(-1/t) (two-sided geometric).  ``t`` broadcasts over shape.
+    Variance: 2 q / (1 - q)^2 with q = exp(-1/t)."""
+    t = np.maximum(np.asarray(t, np.float64), 1e-12)
+    p = np.broadcast_to(-np.expm1(-1.0 / t), shape)
+    g1 = rng.geometric(p, size=shape)
+    g2 = rng.geometric(p, size=shape)
+    return (g1 - g2).astype(np.int64)
+
+
+def privatize_quantized(qup, rng, *, epsilon, clip_norm):
+    """Quantize-then-privatize: add DLap(t) integer noise to every wire row
+    of a ``comm.codec.QuantizedUpload``, with t = (clip_norm/epsilon) / s
+    for the row's grid step s — the calibrated Laplace scale measured in
+    grid units.  Mutates and returns ``qup``; the int8 clamp applied later
+    by ``codec.pack`` is post-processing of the privatized value."""
+    b = clip_norm / epsilon
+    for mrows in qup.rows:
+        for qr in mrows:
+            q, scale = qr
+            if q.size == 0:
+                continue
+            t = b / np.maximum(scale.astype(np.float64), 1e-30)
+            qr[0] = q + discrete_laplace(rng, q.shape, t[:, None])
+    return qup

@@ -13,11 +13,16 @@ The engine is model-agnostic: it drives any ModelConfig whose loss is
 classifier_loss (encoder track) or lm_loss (decoder track).
 
 Every client→server and server→client exchange goes through repro.comm:
-uploads are wire payloads (rank-sparse, element-coded — see comm/codec.py)
-moved over a simulated per-client network (comm/network.py) into a server
-endpoint (comm/server.py).  ``history["uploaded"]`` is therefore *measured*
-payload bytes; for the lossless fp32 codec the element section is asserted
-to agree with the analytic closed form (_upload_count).  Two server modes:
+uploads run the clip → quantize → privatize → encode pipeline
+(comm/pipeline.py — DP noise is discrete on the int8 grid, drawn *after*
+quantization) and move over a simulated per-client network
+(comm/network.py) into a server endpoint (comm/server.py); downloads come
+from a Broadcaster under ``downlink_codec`` (fp32 | bf16 | delta, where
+delta ships only the rank slots changed since the client's last fetch and
+is bit-lossless).  ``history["uploaded"]`` and ``history["downloaded_cum"]``
+are therefore *measured* payload bytes; for the lossless fp32 codec the
+element section is asserted to agree with the analytic closed form
+(_upload_count).  Two server modes:
 
     server_mode='sync'   one aggregation per round (the paper's loop)
     server_mode='async'  FedBuff-style buffered aggregation under the
@@ -36,9 +41,11 @@ import numpy as np
 
 from repro.comm import codec
 from repro.comm import network as net
-from repro.comm.server import BuffServer, ClientUpdate, SyncServer
+from repro.comm import pipeline
+from repro.comm.server import Broadcaster, BuffServer, ClientUpdate, \
+    SyncServer
 from repro.configs.base import ModelConfig
-from repro.core import aggregate, dp, lora, selection
+from repro.core import aggregate, lora, selection
 from repro.models import model as M
 from repro.optim import adamw
 from repro.utils import tree_sub
@@ -69,6 +76,7 @@ class FedConfig:
     hetlora_gamma: float = 0.99
     # --- communication subsystem (repro.comm) ---
     codec: str = "fp32"           # uplink element codec: fp32 | bf16 | int8
+    downlink_codec: str = "fp32"  # server→client: fp32 | bf16 | delta
     server_mode: str = "sync"     # 'sync' | 'async' (FedBuff-style buffered)
     buffer_size: Optional[int] = None  # async: aggregate every K arrivals
     staleness_alpha: float = 0.5  # async: staleness discount exponent
@@ -216,8 +224,11 @@ def _round_parity(fed, t):
 
 
 def _enc_seed(fed, t, k):
-    """Deterministic int8 stochastic-rounding seed per (round, client)."""
-    return (fed.seed * 1_000_003 + t * 1009 + k) % (2 ** 31)
+    """Deterministic, collision-free int8 stochastic-rounding stream per
+    (round, client): a SeedSequence entropy list (np.random.default_rng
+    accepts it directly), so distinct (seed, t, k) triples can never alias
+    the way the old ``t * 1009 + k`` arithmetic did once n_clients >= 1009."""
+    return [fed.seed, t, k]
 
 
 def _client_update(ctx: _Ctx, global_adapters, k, parity, enc_seed):
@@ -264,13 +275,16 @@ def _client_update(ctx: _Ctx, global_adapters, k, parity, enc_seed):
     masked = selection.mask_delta(delta, masks, parity) \
         if parity != PARITY_BOTH else delta
 
+    dp_spec, kn = None, None
     if fed.dp_epsilon is not None:
         ctx.kd, kn = jax.random.split(ctx.kd)
-        masked = dp.privatize(masked, kn, epsilon=fed.dp_epsilon,
-                              clip_norm=fed.dp_clip)
-
-    payload = codec.encode(masked, masks, parity, codec=fed.codec,
-                           seed=enc_seed)
+        dp_spec = pipeline.DPSpec(epsilon=fed.dp_epsilon,
+                                  clip_norm=fed.dp_clip)
+    # clip → quantize → privatize → encode: under codec='int8' the DP noise
+    # is discrete on the quantization grid (comm/pipeline.py), so the codec
+    # never re-rounds the calibrated distribution
+    payload = pipeline.encode_upload(masked, masks, parity, codec=fed.codec,
+                                     seed=enc_seed, dp=dp_spec, key=kn)
     if fed.codec == "fp32":
         # measured wire bytes must agree with the analytic closed form
         stats = codec.payload_stats(payload)
@@ -295,8 +309,8 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, train_ds, test_ds,
                  for i in client_indices]
 
     history = {"round": [], "acc": [], "loss": [], "uploaded": [],
-               "uploaded_cum": 0.0, "downloaded_cum": 0.0, "sim_time": [],
-               "mask_overlap": [], "update_cosine": []}
+               "downloaded": [], "uploaded_cum": 0.0, "downloaded_cum": 0.0,
+               "sim_time": [], "mask_overlap": [], "update_cosine": []}
     network = fed.network if fed.network is not None \
         else net.ideal_network(fed.n_clients)
 
@@ -328,29 +342,24 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, train_ds, test_ds,
     return history
 
 
-def _broadcast(adapters, full_masks):
-    """Server→client: the global adapters as one dense fp32 payload (the
-    downlink codec stays lossless; quantized broadcast is an open item)."""
-    payload = codec.encode(adapters, full_masks, PARITY_BOTH, codec="fp32")
-    return payload, codec.decode(payload)
-
-
 def _run_sync(ctx: _Ctx, adapters, history, test_ds, evaluate):
     """One aggregation per round; round time = slowest participant."""
     fed = ctx.fed
     server = SyncServer(fed.method, adapters, r_G=adapter_rank(fed),
                         client_rank_list=ctx.client_rank_list,
                         hetlora_gamma=fed.hetlora_gamma)
+    bcaster = Broadcaster(fed.downlink_codec)
     clock = net.RoundClock()
 
     for t in range(1, fed.rounds + 1):
         parity = _round_parity(fed, t)
         participants = _sample_participants(ctx.rng, fed)
-        bcast, global_at_client = _broadcast(server.adapters, ctx.full_masks)
         ref_adapters = server.adapters  # pre-aggregation global (tracking)
 
         updates, results, arrivals = [], [], []
         for k in participants:
+            bcast, global_at_client = bcaster.payload_for(
+                k, server.adapters, server.version)
             down = ctx.net.downlink(k, len(bcast), now=clock.now)
             history["downloaded_cum"] += len(bcast)
             res = _client_update(ctx, global_at_client, k, parity,
@@ -377,6 +386,7 @@ def _run_sync(ctx: _Ctx, adapters, history, test_ds, evaluate):
             history["loss"].append(
                 float(np.mean([l for r in results for l in r.losses])))
             history["uploaded"].append(history["uploaded_cum"])
+            history["downloaded"].append(history["downloaded_cum"])
             history["sim_time"].append(clock.now)
             if fed.track_similarity:
                 history["mask_overlap"].append(
@@ -403,7 +413,9 @@ def _run_async(ctx: _Ctx, adapters, history, test_ds, evaluate):
     # budget (generous vs the ~rounds*K + cohort launches of a clean run)
     # guarantees termination instead of relaunching dropped clients forever
     launch_budget = (fed.rounds * K + len(participants)) * 8
-    bcast_cache = {}  # server.version -> (payload, decoded) broadcast
+    # the Broadcaster caches dense payloads per buffer generation (global
+    # version) and, under 'delta', tracks each client's last-fetched state
+    bcaster = Broadcaster(fed.downlink_codec)
 
     def launch(k, now):
         nonlocal seq
@@ -412,11 +424,8 @@ def _run_async(ctx: _Ctx, adapters, history, test_ds, evaluate):
         # often even when clients straddle buffer flushes
         launches[k] += 1
         parity = _round_parity(fed, launches[k])
-        if server.version not in bcast_cache:
-            bcast_cache.clear()  # only the current version is ever fetched
-            bcast_cache[server.version] = _broadcast(server.adapters,
-                                                     ctx.full_masks)
-        bcast, global_at_client = bcast_cache[server.version]
+        bcast, global_at_client = bcaster.payload_for(k, server.adapters,
+                                                      server.version)
         down = ctx.net.downlink(k, len(bcast), now=now)
         history["downloaded_cum"] += len(bcast)
         res = _client_update(ctx, global_at_client, k, parity,
@@ -441,6 +450,7 @@ def _run_async(ctx: _Ctx, adapters, history, test_ds, evaluate):
         history["loss"].append(float(np.mean(pending_losses))
                                if pending_losses else float("nan"))
         history["uploaded"].append(history["uploaded_cum"])
+        history["downloaded"].append(history["downloaded_cum"])
         history["sim_time"].append(now)
         pending_losses.clear()
 
@@ -471,14 +481,21 @@ def _run_full_ft(cfg, fed, params, client_ds, weights, test_ds, history, rng,
     step = make_full_ft_step(cfg, opt_cfg)
     evaluate = make_eval(cfg, 1.0) if cfg.is_encoder else None
     clock = net.RoundClock()
+    # full FT trains every base parameter, so a slot-delta downlink would be
+    # dense anyway — 'delta' falls back to the dense fp32 broadcast
+    dl_codec = "fp32" if fed.downlink_codec == "delta" else fed.downlink_codec
     for t in range(1, fed.rounds + 1):
         participants = _sample_participants(rng, fed)
-        bcast = codec.encode_dense(params, codec="fp32")
+        bcast = codec.encode_dense(params, codec=dl_codec)
+        # clients train from the *decoded* broadcast (fp32 decodes to the
+        # server's params bit-exactly; bf16 is a lossy downlink)
+        client_params = params if dl_codec == "fp32" \
+            else codec.decode_dense(bcast)
         deltas, survivors, losses, arrivals = [], [], [], []
         for k in participants:
             down = network.downlink(k, len(bcast), now=clock.now)
             history["downloaded_cum"] += len(bcast)
-            local, opt_state = params, adamw.init_state(params)
+            local, opt_state = client_params, adamw.init_state(client_params)
             ds_k = client_ds[k]
             n_k = len(ds_k) if hasattr(ds_k, "__len__") else len(ds_k["labels"])
             n_steps = 0
@@ -488,7 +505,7 @@ def _run_full_ft(cfg, fed, params, client_ds, weights, test_ds, history, rng,
                                                   _make_batch(cfg, ds_k, bidx))
                     losses.append(float(loss))
                     n_steps += 1
-            payload = codec.encode_dense(tree_sub(local, params),
+            payload = codec.encode_dense(tree_sub(local, client_params),
                                          codec=fed.codec,
                                          seed=_enc_seed(fed, t, k))
             t_done = down.arrived_at + \
@@ -510,6 +527,7 @@ def _run_full_ft(cfg, fed, params, client_ds, weights, test_ds, history, rng,
             history["acc"].append(acc)
             history["loss"].append(float(np.mean(losses)))
             history["uploaded"].append(history["uploaded_cum"])
+            history["downloaded"].append(history["downloaded_cum"])
             history["sim_time"].append(clock.now)
     history["params"] = params
     return history

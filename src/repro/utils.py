@@ -40,6 +40,13 @@ def tree_l2(a):
     return jnp.sqrt(tree_dot(a, a))
 
 
+def tree_l1(a):
+    """Global L1 norm of a pytree (the Laplace mechanism's sensitivity norm)."""
+    leaves = jax.tree.map(
+        lambda x: jnp.sum(jnp.abs(x.astype(jnp.float32))), a)
+    return sum(jax.tree.leaves(leaves))
+
+
 def tree_bytes(tree):
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
 

@@ -147,6 +147,29 @@ def test_bad_codec_and_bad_magic_raise():
         codec.decode(b"NOPE" + b"\x00" * 16)
 
 
+@pytest.mark.parametrize("name", ["fp32", "bf16", "int8"])
+def test_dense_payload_stats_sections_sum_to_total(name):
+    """The dense-payload branch of payload_stats must account for every
+    byte, exactly like the rank-sparse branch always has."""
+    tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": {"c": np.ones((5,), np.float32), "s": np.float32(2.0)}}
+    stats = codec.payload_stats(codec.encode_dense(tree, codec=name))
+    assert stats.header_bytes + stats.index_bytes + stats.scale_bytes + \
+        stats.data_bytes == stats.total_bytes
+    assert stats.n_elements == 18
+
+
+def test_enc_seed_streams_are_collision_free():
+    """The old t*1009+k arithmetic aliased (t=1,k=1009) with (t=2,k=0);
+    SeedSequence entropy lists cannot."""
+    from repro.core.federation import FedConfig, _enc_seed
+    fed = FedConfig()
+    a = np.random.default_rng(_enc_seed(fed, 1, 1009)).random(8)
+    b = np.random.default_rng(_enc_seed(fed, 2, 0)).random(8)
+    assert not np.array_equal(a, b)
+    assert _enc_seed(fed, 1, 1009) != _enc_seed(fed, 2, 0)
+
+
 # ---------------------------------------------------------------------------
 # network
 # ---------------------------------------------------------------------------
@@ -179,6 +202,86 @@ def test_heterogeneous_fleet_has_stragglers():
     speeds = sorted(l.compute_speed for l in fleet.links)
     assert speeds[0] == pytest.approx(1 / 8) and speeds[-1] == 1.0
     assert sum(1 for s in speeds if s < 1.0) == 2
+
+
+def test_network_traffic_accounting_counts_both_directions():
+    netw = network.SimulatedNetwork(
+        [network.LinkModel(drop_prob=1.0), network.LinkModel()], seed=0)
+    netw.uplink(0, 100)       # dropped, but the bytes were transmitted
+    netw.uplink(1, 50)
+    netw.downlink(0, 300)
+    t = netw.traffic()
+    assert t["total_up"] == 150 and t["total_down"] == 300
+    assert list(t["uplink_bytes"]) == [100, 50]
+    assert list(t["downlink_bytes"]) == [300, 0]
+
+
+# ---------------------------------------------------------------------------
+# downlink broadcaster
+# ---------------------------------------------------------------------------
+
+
+def _dense_state(adapters):
+    return codec.decode(codec.encode(adapters, selection.masks_like(adapters),
+                                     2, codec="fp32"))
+
+
+def _assert_trees_equal(a, b):
+    assert jax.tree.structure(a) == jax.tree.structure(b)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_broadcaster_rejects_unknown_codec():
+    with pytest.raises(ValueError):
+        server.Broadcaster("int8")  # int8 is an uplink codec, not downlink
+
+
+def test_broadcaster_bf16_halves_dense_bytes():
+    g = _adapters(0)
+    p32, s32 = server.Broadcaster("fp32").payload_for(0, g, 0)
+    p16, s16 = server.Broadcaster("bf16").payload_for(0, g, 0)
+    assert codec.payload_stats(p16).data_bytes * 2 == \
+        codec.payload_stats(p32).data_bytes
+    # bf16 downlink is lossy: the client state rounds through bf16
+    import ml_dtypes
+    for x, y in zip(jax.tree.leaves(s16), jax.tree.leaves(s32)):
+        want = np.asarray(y).astype(ml_dtypes.bfloat16).astype(np.float32)
+        np.testing.assert_array_equal(np.asarray(x, np.float32), want)
+
+
+def test_broadcaster_delta_is_bit_exact_and_smaller():
+    """Acceptance (unit layer): the client state after N delta downlinks is
+    bit-identical to the dense fp32 downlink state, and the per-round delta
+    payload is smaller than the dense broadcast."""
+    g = _adapters(0)
+    bc = server.Broadcaster("delta")
+    # first fetch: dense fp32, bit-exact
+    p0, s0 = bc.payload_for(0, g, 0)
+    _assert_trees_equal(s0, _dense_state(g))
+
+    # an aggregation moves only the b-half of the first 2 rank slots
+    masks = selection.first_k_masks(g, 2)
+    step = selection.mask_delta(tree_sub(_random_delta(21), g), masks, 1)
+    from repro.utils import tree_add
+    g1 = tree_add(g, step)
+    p1, s1 = bc.payload_for(0, g1, 1)
+    _assert_trees_equal(s1, _dense_state(g1))
+    assert len(p1) < len(p0) / 2      # only changed slots travelled
+
+    # a lagging client (last saw version 0) still reconstructs exactly
+    g2 = tree_add(g1, selection.mask_delta(
+        tree_sub(_random_delta(22), g), masks, 0))  # now the a-half moves
+    bc_lag = server.Broadcaster("delta")
+    bc_lag.payload_for(1, g, 0)
+    _, s_lag = bc_lag.payload_for(1, g2, 2)
+    _assert_trees_equal(s_lag, _dense_state(g2))
+
+    # nothing changed since the last fetch -> header-only payload
+    p3, s3 = bc.payload_for(0, g1, 1)
+    assert len(p3) < len(p1)
+    assert codec.payload_stats(p3).n_selected == 0
+    _assert_trees_equal(s3, _dense_state(g1))
 
 
 # ---------------------------------------------------------------------------
@@ -294,6 +397,49 @@ def test_async_with_stragglers_learns_and_is_faster(data):
     assert ha["sim_time"][-1] < hs["sim_time"][-1]
     assert max(ha["staleness"]) >= 1           # stragglers induce staleness
     assert all(np.isfinite(a) for a in ha["acc"])
+
+
+@pytest.mark.slow
+def test_delta_downlink_lossless_and_fewer_bytes(data):
+    """Acceptance: over a >= 10-round run, downlink_codec='delta' measures
+    strictly fewer downloaded bytes than the dense fp32 broadcast with a
+    bit-identical training trajectory (the delta path is lossless), and the
+    engine's byte counters agree with the transport's own tally."""
+    train, test, parts = data
+    cfg = dict(rounds=10, local_epochs=1, eval_every=5)
+    net_fp = network.ideal_network(4)
+    net_dl = network.ideal_network(4)
+    h_fp = run_federated(CFG, _fed(network=net_fp, **cfg), train, test, parts)
+    h_dl = run_federated(CFG, _fed(network=net_dl, downlink_codec="delta",
+                                   **cfg), train, test, parts)
+    assert h_dl["acc"] == h_fp["acc"]          # lossless => identical evals
+    assert h_dl["downloaded_cum"] < h_fp["downloaded_cum"]
+    assert h_dl["downloaded"][-1] == h_dl["downloaded_cum"]
+    # measured at the transport, not inferred by the engine
+    assert net_dl.traffic()["total_down"] == h_dl["downloaded_cum"]
+    assert net_dl.traffic()["total_up"] == h_dl["uploaded_cum"]
+
+
+def test_bf16_and_delta_downlinks_run(data):
+    train, test, parts = data
+    for dl in ("bf16", "delta"):
+        h = run_federated(CFG, _fed(rounds=2, downlink_codec=dl),
+                          train, test, parts)
+        assert all(np.isfinite(a) for a in h["acc"])
+        assert h["downloaded_cum"] > 0
+
+
+@pytest.mark.slow
+def test_async_delta_downlink_reconstructs_per_generation(data):
+    """Async: delta baselines are versioned per buffer generation via the
+    Broadcaster; the run completes and downloads fewer bytes than dense."""
+    train, test, parts = data
+    cfg = dict(rounds=8, server_mode="async", buffer_size=2)
+    h_fp = run_federated(CFG, _fed(**cfg), train, test, parts)
+    h_dl = run_federated(CFG, _fed(downlink_codec="delta", **cfg),
+                         train, test, parts)
+    assert all(np.isfinite(a) for a in h_dl["acc"])
+    assert h_dl["downloaded_cum"] < h_fp["downloaded_cum"]
 
 
 def test_sync_dropout_renormalizes_and_completes(data):

@@ -130,13 +130,45 @@ def test_hetlora_zero_padding():
     masks = selection.first_k_masks(g, 2)
     c = _perturb(g, 1, half="b")
     delta = selection.mask_delta(tree_sub(c, g), masks, parity=1)
-    new = aggregate.hetlora(g, [delta], [1.0], client_ranks=[2])
+    gamma = 0.9
+    new = aggregate.hetlora(g, [delta], [1.0], client_ranks=[2], gamma=gamma)
     for path, ab in lora.iter_modules(new):
         base = selection._get(g, path)
-        # ranks >= 2 of b unchanged up to the global decay on tail ranks
-        np.testing.assert_allclose(np.asarray(ab["b"][..., 2:, :]),
-                                   np.asarray(base["b"][..., 2:, :]) * 1.0,
+        # ranks >= 2 are beyond the (single) client's truncation rank:
+        # untouched by the delta, decayed by the full gamma
+        np.testing.assert_allclose(np.asarray(ab["a"][..., :, 2:]),
+                                   np.asarray(base["a"][..., :, 2:]) * gamma,
                                    atol=1e-6)
+        # ranks < 2 of a (the frozen half here) don't decay at all
+        np.testing.assert_allclose(np.asarray(ab["a"][..., :, :2]),
+                                   np.asarray(base["a"][..., :, :2]),
+                                   atol=1e-6)
+
+
+def test_hetlora_sparsity_decay_hits_tail_ranks():
+    """Regression (ISSUE 2): with client_ranks=[4, 8] and global rank 8 the
+    old ``arange(r) < max(client_ranks)`` gate made gamma a no-op; the decay
+    must shrink the slots beyond each client's truncation rank every round,
+    weighted by that client's aggregation weight."""
+    g = _adapters(0, rank=8)
+    zero = jax.tree.map(jnp.zeros_like, g)
+    gamma, w = 0.9, [0.5, 0.5]
+    new = aggregate.hetlora(g, [zero, zero], w, client_ranks=[4, 8],
+                            gamma=gamma)
+    tail = gamma ** 0.5   # only the rank-4 client (weight .5) excludes 4..7
+    for rounds in range(1, 4):   # decay compounds round over round
+        for path, ab in lora.iter_modules(new):
+            base = selection._get(g, path)
+            np.testing.assert_allclose(
+                np.asarray(ab["a"][..., :, 4:]),
+                np.asarray(base["a"][..., :, 4:]) * tail ** rounds,
+                atol=1e-5)
+            # slots every client trains never decay
+            np.testing.assert_allclose(np.asarray(ab["a"][..., :, :4]),
+                                       np.asarray(base["a"][..., :, :4]),
+                                       atol=1e-6)
+        new = aggregate.hetlora(new, [zero, zero], w, client_ranks=[4, 8],
+                                gamma=gamma)
 
 
 def test_dp_clip_and_noise():

@@ -3,12 +3,26 @@
 ``python -m benchmarks.run``           quick pass (reduced grids, ~minutes)
 ``python -m benchmarks.run --full``    full grids (paper-shaped axes)
 ``python -m benchmarks.run --only table1 table4``
+``python -m benchmarks.run --check``   byte-regression gate (see below)
 
 Prints ``name,us_per_call,derived`` CSV lines; JSON artifacts land in
 artifacts/bench/.  The dry-run/roofline deliverables live separately in
 launch/dryrun.py + launch/roofline.py (they need 512 forced host devices).
+
+--check is the CI communication-cost gate: before running, the *committed*
+artifacts/bench/*.json are loaded as baselines (from git HEAD when
+available, so locally overwritten artifacts cannot launder a regression);
+after the run, every numeric field whose key mentions "bytes" is compared
+row-by-row and the gate fails on any measured-bytes growth above 1%.
+Byte counts are deterministic for a fixed environment (codec layouts +
+seeded runs); the committed baselines are quick-pass outputs, so --check
+refuses --full.  If a jax upgrade legitimately shifts the delta-downlink
+slot selection, re-commit the quick-pass artifacts alongside it.
 """
 import argparse
+import json
+import os
+import subprocess
 import sys
 import time
 import traceback
@@ -36,15 +50,111 @@ TABLES = {
     "async": async_stragglers.main,
 }
 
+# benches the --check gate covers: name -> committed artifact filename
+# (benchmarks/common.py save()).  Only these two report measured-bytes
+# fields; their quick-pass output is deterministic, so the committed
+# baselines are quick-pass artifacts.
+ARTIFACTS = {
+    "comm": "comm_cost",
+    "codec": "codec_accuracy",
+}
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+REGRESSION_TOL = 0.01   # fail when measured bytes grow by more than 1%
+
+
+def _artifact_path(name):
+    return os.path.join(ART_DIR, ARTIFACTS[name] + ".json")
+
+
+def _load_rows(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _load_baseline(name):
+    """The committed baseline: prefer the git-HEAD version of the artifact
+    (a plain bench run overwrites the file in place, and a baseline read
+    from the overwritten file would compare fresh against fresh); fall
+    back to the on-disk file outside a git checkout.  None when neither
+    exists."""
+    rel = os.path.relpath(_artifact_path(name),
+                          os.path.join(os.path.dirname(__file__), ".."))
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{rel}"],
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+            capture_output=True, text=True, timeout=10)
+        if out.returncode == 0:
+            return json.loads(out.stdout)
+    except (OSError, subprocess.TimeoutExpired, json.JSONDecodeError):
+        pass
+    if os.path.exists(_artifact_path(name)):
+        return _load_rows(_artifact_path(name))
+    return None
+
+
+def _byte_regressions(name, baseline, fresh):
+    """Row-by-row compare of every numeric field whose key mentions
+    'bytes'.  Generation order is deterministic, so rows align by index;
+    a row-count change means the bench itself changed — that requires
+    re-committing the baseline, so it fails the gate explicitly."""
+    problems = []
+    if len(baseline) != len(fresh):
+        problems.append(f"{name}: row count changed "
+                        f"{len(baseline)} -> {len(fresh)} (bench changed? "
+                        f"re-commit artifacts/bench/{ARTIFACTS[name]}.json)")
+        return problems
+    for i, (old, new) in enumerate(zip(baseline, fresh)):
+        for key, was in old.items():
+            if "bytes" not in key or not isinstance(was, (int, float)):
+                continue
+            now = new.get(key)
+            if not isinstance(now, (int, float)):
+                problems.append(f"{name}[{i}].{key}: baseline {was} has no "
+                                f"fresh counterpart")
+                continue
+            if now > was * (1.0 + REGRESSION_TOL):
+                problems.append(
+                    f"{name}[{i}].{key}: {was:.0f}B -> {now:.0f}B "
+                    f"(+{100.0 * (now / was - 1.0):.2f}% > "
+                    f"{100 * REGRESSION_TOL:.0f}%)")
+    return problems
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full grids (slower; default is the quick pass)")
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--check", action="store_true",
+                    help="byte-regression gate: compare fresh byte counts "
+                         "against the committed artifacts/bench baselines "
+                         f"and fail on >{100 * REGRESSION_TOL:.0f}% growth")
     args = ap.parse_args()
 
+    if args.check and args.full:
+        # the committed baselines are quick-pass outputs; full grids have
+        # different row counts and cumulative byte magnitudes, so the
+        # comparison would be spurious by construction
+        raise SystemExit("--check compares against quick-pass baselines; "
+                         "run it without --full")
+
     names = args.only or list(TABLES)
+    baselines = {}
+    missing = []
+    if args.check:
+        for name in names:
+            if name not in ARTIFACTS:
+                continue
+            rows = _load_baseline(name)
+            if rows is not None:
+                baselines[name] = rows
+            else:
+                # a gate that silently skips is no gate: a requested bench
+                # without a committed baseline fails loudly
+                missing.append(f"{name}: no committed baseline at "
+                               f"{_artifact_path(name)}")
+
     failures = []
     t0 = time.time()
     for name in names:
@@ -54,10 +164,24 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))
             traceback.print_exc()
+
+    regressions = list(missing)
+    for name, baseline in baselines.items():
+        if any(n == name for n, _ in failures):
+            continue            # already failing; don't double-report
+        regressions += _byte_regressions(name, baseline,
+                                         _load_rows(_artifact_path(name)))
+
     print(f"# total {time.time()-t0:.0f}s", file=sys.stderr)
-    if failures:
+    if args.check:
+        checked = ", ".join(sorted(baselines)) or "none"
+        print(f"# byte-regression gate over: {checked} — "
+              f"{len(regressions)} regression(s)", file=sys.stderr)
+    if failures or regressions:
         for n, e in failures:
             print(f"# FAILED {n}: {e}", file=sys.stderr)
+        for r in regressions:
+            print(f"# BYTE REGRESSION {r}", file=sys.stderr)
         raise SystemExit(1)
 
 

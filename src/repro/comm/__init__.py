@@ -1,20 +1,26 @@
 """repro.comm — the communication subsystem for the federated loop.
 
-Four layers (see README "repro.comm" section):
+Five layers (see README "repro.comm" section):
 
-  codec.py     wire-format codecs: rank-sparse packing of masked adapter
-               deltas with pluggable element codecs (fp32 / bf16 / int8)
-  pipeline.py  the uplink composition clip → quantize → privatize → encode
-               (DP noise is discrete on the int8 grid, after quantization)
-  network.py   simulated per-client links (bandwidth / latency / dropout),
-               per-direction traffic accounting, and the round clock
-  server.py    server endpoints: synchronous round server, a FedBuff-style
-               async buffered server, and the downlink Broadcaster
-               (fp32 / bf16 / delta server→client codecs)
+  codec.py      wire-format codecs: rank-sparse packing of masked adapter
+                deltas with pluggable element codecs (fp32 / bf16 / int8)
+  pipeline.py   the uplink composition clip → quantize → privatize → encode
+                (DP noise is discrete on the int8 grid, after quantization)
+  network.py    simulated per-client links (bandwidth / latency / dropout),
+                per-direction traffic accounting, and the round clock
+  transport.py  the engine-facing Transport protocol + the real socket
+                backend: a length-prefixed framed message protocol
+                (u32 length | u8 kind | u32 version) over TCP or
+                Unix-domain sockets, with the same traffic() accounting as
+                the simulated network so measured bytes are comparable
+  server.py     server endpoints: synchronous round server, a FedBuff-style
+                async buffered server, and the downlink Broadcaster
+                (fp32 / bf16 / delta server→client codecs)
 
 Every client→server and server→client exchange in core/federation.py is
-routed through these layers, so `history["uploaded"]` and
+routed through the Transport interface, so `history["uploaded"]` and
 `history["downloaded_cum"]` are measured wire bytes, not analytic
-estimates.
+estimates — on the simulated backend and over real sockets alike
+(launch/fleet.py).
 """
-from repro.comm import codec, network, pipeline, server  # noqa: F401
+from repro.comm import codec, network, pipeline, server, transport  # noqa: F401

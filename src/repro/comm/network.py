@@ -85,7 +85,9 @@ class SimulatedNetwork:
         return self._xfer(k, nbytes, now, self.links[k].downlink_bytes_per_s,
                           can_drop=False)
 
-    def compute_time(self, k, n_steps, step_time_s=0.01) -> float:
+    def compute_time(self, k, n_steps, step_time_s) -> float:
+        # step_time_s comes from FedConfig.step_time_s — deliberately no
+        # default here, so the config stays the single source of truth
         return n_steps * step_time_s / self.links[k].compute_speed
 
     def traffic(self) -> dict:

@@ -1,0 +1,484 @@
+"""Real socket transport: the framed wire protocol behind multi-process runs.
+
+Two layers live here:
+
+1. The engine-facing ``Transport`` protocol — the uplink/downlink interface
+   ``core/federation.py`` routes every exchange through.  ``SimulatedTransport``
+   adapts a ``SimulatedNetwork`` to it (payload bytes in, simulated arrival
+   times out), so the simulated and real backends are swappable and the
+   simulated path stays byte- and trajectory-identical to the pre-transport
+   engine (``len(payload)`` is exactly the size the engine used to pass).
+
+2. The framed message protocol over real OS sockets (TCP or Unix-domain),
+   used by the multi-process driver in ``launch/fleet.py``:
+
+       frame := header | payload
+       header := u32 payload length | u8 kind | u32 version   (little-endian)
+
+   The version field is the wire-protocol version on HELLO frames and the
+   global model version everywhere else (the server's on BCAST, the version
+   the client trained from on FETCH/UPLOAD).  Payloads are the
+   self-describing ``comm/codec.py`` byte strings — the same bytes the
+   simulated path accounts, which is what makes ``traffic()`` comparable
+   across backends: ``bytes_up``/``bytes_down`` count only BCAST/UPLOAD
+   payload bytes; frame headers and control frames (HELLO/FETCH/META/DONE)
+   are tallied separately as ``overhead_up``/``overhead_down``.
+
+``ServerTransport`` is a single-threaded selector loop: per-connection
+``FrameBuffer``s reassemble frames from arbitrarily fragmented reads, a
+clean EOF mid-frame (client died mid-upload) surfaces as a ``(client_id,
+None)`` event so the server can drop the client and let the round proceed
+— the socket twin of ``LinkModel.drop_prob``.  ``ClientTransport`` is a
+plain blocking socket with timeouts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import selectors
+import socket
+import struct
+from typing import Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.comm import network as net
+
+PROTOCOL_VERSION = 1
+HDR = struct.Struct("<IBI")         # u32 length, u8 kind, u32 version
+MAX_FRAME = 1 << 30                 # sanity bound: reject garbage lengths
+MAX_CLIENTS = 1 << 20               # sanity bound on HELLO client ids
+
+KIND_HELLO = 1    # client -> server: payload = JSON {"client": id}
+KIND_FETCH = 2    # client -> server: request the current broadcast
+KIND_BCAST = 3    # server -> client: payload = Broadcaster bytes
+KIND_META = 4     # client -> server: JSON round metadata (losses, n_steps)
+KIND_UPLOAD = 5   # client -> server: payload = comm/codec.py upload bytes
+KIND_DONE = 6     # server -> client: the run is over
+KIND_NAMES = {1: "HELLO", 2: "FETCH", 3: "BCAST", 4: "META", 5: "UPLOAD",
+              6: "DONE"}
+
+
+class TransportError(RuntimeError):
+    """Protocol violation or unexpected connection state."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Frame:
+    kind: int
+    version: int
+    payload: bytes = b""
+
+
+# ---------------------------------------------------------------------------
+# engine-facing transport protocol
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class Transport(Protocol):
+    """What ``core/federation.py`` needs from a comm backend: both the
+    simulated network (via ``SimulatedTransport``) and the real socket
+    server expose this accounting surface, so measured bytes are
+    comparable across backends."""
+
+    def downlink(self, k: int, payload: bytes,
+                 now: float = 0.0) -> net.Transmission: ...
+
+    def uplink(self, k: int, payload: bytes,
+               now: float = 0.0) -> net.Transmission: ...
+
+    def compute_time(self, k: int, n_steps: int,
+                     step_time_s: float) -> float: ...
+
+    def traffic(self) -> dict: ...
+
+
+class SimulatedTransport:
+    """Adapter: the engine hands over payload *bytes*; the wrapped
+    ``SimulatedNetwork`` sees exactly ``len(payload)`` — the same number
+    the pre-transport engine passed, so wrapping is byte-identical."""
+
+    def __init__(self, network: net.SimulatedNetwork):
+        self.network = network
+
+    def downlink(self, k, payload, now=0.0):
+        return self.network.downlink(k, len(payload), now=now)
+
+    def uplink(self, k, payload, now=0.0):
+        return self.network.uplink(k, len(payload), now=now)
+
+    def compute_time(self, k, n_steps, step_time_s):
+        return self.network.compute_time(k, n_steps, step_time_s)
+
+    def traffic(self):
+        return self.network.traffic()
+
+
+def as_transport(obj) -> Transport:
+    """Wrap a SimulatedNetwork; pass any ready-made Transport through."""
+    if isinstance(obj, net.SimulatedNetwork):
+        return SimulatedTransport(obj)
+    return obj
+
+
+# ---------------------------------------------------------------------------
+# frame (de)serialization
+# ---------------------------------------------------------------------------
+
+
+def write_frame(sock, kind: int, version: int, payload: bytes = b""):
+    """Serialize one frame onto a socket.  ``sendall`` loops internally, so
+    frames larger than one send() window still go out whole."""
+    if len(payload) > MAX_FRAME:
+        raise TransportError(f"frame too large: {len(payload)}B")
+    sock.sendall(HDR.pack(len(payload), kind, version) + payload)
+
+
+def _read_exact(sock, n: int) -> Optional[bytes]:
+    """Read exactly n bytes, looping over however many partial recvs the
+    kernel hands back.  None on clean EOF at a frame boundary; raises on
+    EOF mid-frame (the peer died with a frame half-sent)."""
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            if buf:
+                raise TransportError("connection closed mid-frame")
+            return None
+        buf += chunk
+    return bytes(buf)
+
+
+def read_frame(sock) -> Optional[Frame]:
+    """Blocking read of one frame; None on clean EOF."""
+    hdr = _read_exact(sock, HDR.size)
+    if hdr is None:
+        return None
+    length, kind, version = HDR.unpack(hdr)
+    if length > MAX_FRAME:
+        raise TransportError(f"declared frame length {length}B exceeds "
+                             f"MAX_FRAME={MAX_FRAME}")
+    payload = b""
+    if length:
+        payload = _read_exact(sock, length)
+        if payload is None:
+            raise TransportError("connection closed mid-frame")
+    return Frame(kind, version, payload)
+
+
+class FrameBuffer:
+    """Incremental frame reassembly for non-blocking reads: feed() accepts
+    arbitrarily small chunks (down to one byte) and yields every frame that
+    has fully arrived.  ``incomplete`` is True while a partial frame is
+    pending — an EOF in that state means the peer died mid-frame."""
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    @property
+    def incomplete(self) -> bool:
+        return len(self._buf) > 0
+
+    def feed(self, data: bytes):
+        self._buf += data
+        frames = []
+        while True:
+            if len(self._buf) < HDR.size:
+                break
+            length, kind, version = HDR.unpack_from(self._buf)
+            if length > MAX_FRAME:
+                raise TransportError(f"declared frame length {length}B "
+                                     f"exceeds MAX_FRAME={MAX_FRAME}")
+            if len(self._buf) < HDR.size + length:
+                break
+            payload = bytes(self._buf[HDR.size:HDR.size + length])
+            del self._buf[:HDR.size + length]
+            frames.append(Frame(kind, version, payload))
+        return frames
+
+
+# ---------------------------------------------------------------------------
+# addresses
+# ---------------------------------------------------------------------------
+
+
+def parse_address(spec: str):
+    """'uds:/path/to.sock' or 'tcp:host:port' -> (family, sockaddr)."""
+    if spec.startswith("uds:"):
+        return socket.AF_UNIX, spec[4:]
+    if spec.startswith("tcp:"):
+        host, _, port = spec[4:].rpartition(":")
+        if not host or not port:
+            raise ValueError(f"bad tcp address {spec!r}; want tcp:host:port")
+        return socket.AF_INET, (host, int(port))
+    raise ValueError(f"bad address {spec!r}; want 'uds:<path>' or "
+                     f"'tcp:<host>:<port>'")
+
+
+def _format_address(family, sockaddr) -> str:
+    if family == socket.AF_UNIX:
+        return f"uds:{sockaddr}"
+    return f"tcp:{sockaddr[0]}:{sockaddr[1]}"
+
+
+# ---------------------------------------------------------------------------
+# server side
+# ---------------------------------------------------------------------------
+
+
+class _Conn:
+    def __init__(self, sock):
+        self.sock = sock
+        self.buf = FrameBuffer()
+        self.client_id: Optional[int] = None
+
+
+class ServerTransport:
+    """Accepts client connections, demultiplexes framed messages, and keeps
+    the per-client / per-direction byte tally (``traffic()``) the simulated
+    backend also reports.
+
+    Events come out of ``recv()`` as ``(client_id, Frame)``; a client that
+    disconnects — cleanly or mid-frame — surfaces once as ``(client_id,
+    None)`` and is deregistered.  All waits honor ``timeout`` (seconds), so
+    a hung client raises ``TimeoutError`` instead of wedging the server.
+    """
+
+    def __init__(self, address: str, *, timeout: float = 60.0):
+        self.timeout = timeout
+        self._family, sockaddr = parse_address(address)
+        self._uds_path = sockaddr if self._family == socket.AF_UNIX else None
+        lsock = socket.socket(self._family, socket.SOCK_STREAM)
+        if self._family == socket.AF_INET:
+            lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        lsock.bind(sockaddr)
+        lsock.listen(128)
+        lsock.setblocking(False)
+        self._lsock = lsock
+        # the bound address (TCP port 0 resolves here) — hand this to clients
+        self.address = _format_address(self._family, lsock.getsockname())
+        self._sel = selectors.DefaultSelector()
+        self._sel.register(lsock, selectors.EVENT_READ, None)
+        self._conns: dict[int, _Conn] = {}
+        self._events: list = []
+        self.bytes_up: dict[int, float] = {}
+        self.bytes_down: dict[int, float] = {}
+        self.overhead_up = 0.0
+        self.overhead_down = 0.0
+
+    # -- bookkeeping --------------------------------------------------------
+
+    @property
+    def clients(self):
+        """Live registered client ids."""
+        return sorted(self._conns)
+
+    def _account_up(self, cid, frame):
+        self.bytes_up.setdefault(cid, 0.0)
+        self.bytes_down.setdefault(cid, 0.0)
+        self.overhead_up += HDR.size
+        if frame.kind == KIND_UPLOAD:
+            self.bytes_up[cid] += len(frame.payload)
+        else:
+            self.overhead_up += len(frame.payload)
+
+    def traffic(self) -> dict:
+        """Measured payload bytes per client and direction, same shape as
+        ``SimulatedNetwork.traffic()`` — BCAST/UPLOAD payloads only, so the
+        totals are directly comparable with the simulated backend.  Framing
+        and control-message bytes are reported separately."""
+        n = max(list(self.bytes_up) + list(self.bytes_down), default=-1) + 1
+        up, down = np.zeros(n), np.zeros(n)
+        for k, v in self.bytes_up.items():
+            up[k] = v
+        for k, v in self.bytes_down.items():
+            down[k] = v
+        return {"uplink_bytes": up, "downlink_bytes": down,
+                "total_up": float(up.sum()), "total_down": float(down.sum()),
+                "overhead_up": self.overhead_up,
+                "overhead_down": self.overhead_down}
+
+    # -- event pump ---------------------------------------------------------
+
+    def _disconnect(self, conn: _Conn):
+        try:
+            self._sel.unregister(conn.sock)
+        except (KeyError, ValueError):
+            pass
+        conn.sock.close()
+        if conn.client_id is not None and conn.client_id in self._conns:
+            del self._conns[conn.client_id]
+            self._events.append((conn.client_id, None))
+
+    def _on_frame(self, conn: _Conn, frame: Frame):
+        if conn.client_id is None:
+            if frame.kind != KIND_HELLO:
+                raise TransportError(
+                    f"first frame must be HELLO, got "
+                    f"{KIND_NAMES.get(frame.kind, frame.kind)}")
+            if frame.version != PROTOCOL_VERSION:
+                raise TransportError(
+                    f"protocol version skew: peer speaks v{frame.version}, "
+                    f"server speaks v{PROTOCOL_VERSION}")
+            cid = int(json.loads(frame.payload.decode())["client"])
+            if not 0 <= cid < MAX_CLIENTS:
+                # traffic() builds dense per-client arrays sized max(id)+1;
+                # a negative id would alias another client's tally and an
+                # absurd one would allocate accordingly
+                raise TransportError(f"client id {cid} out of range "
+                                     f"[0, {MAX_CLIENTS})")
+            if cid in self._conns:
+                raise TransportError(f"duplicate client id {cid}")
+            conn.client_id = cid
+            self._conns[cid] = conn
+            self._account_up(cid, frame)
+            return
+        self._account_up(conn.client_id, frame)
+        self._events.append((conn.client_id, frame))
+
+    def _pump(self, timeout: float):
+        for key, _ in self._sel.select(timeout):
+            if key.data is None:           # the listening socket
+                sock, _ = self._lsock.accept()
+                sock.setblocking(True)
+                sock.settimeout(self.timeout)
+                self._sel.register(sock, selectors.EVENT_READ, _Conn(sock))
+                continue
+            conn: _Conn = key.data
+            try:
+                data = conn.sock.recv(1 << 16)
+            except (ConnectionResetError, OSError):
+                data = b""
+            if not data:                   # EOF — mid-frame or not, the
+                self._disconnect(conn)     # client is gone: drop it
+                continue
+            try:
+                for frame in conn.buf.feed(data):
+                    self._on_frame(conn, frame)
+            except TransportError:
+                self._disconnect(conn)
+                raise
+
+    def _wait(self, cond, what: str, timeout: Optional[float]):
+        import time
+        deadline = time.monotonic() + (self.timeout if timeout is None
+                                       else timeout)
+        while not cond():
+            left = deadline - time.monotonic()
+            if left <= 0:
+                raise TimeoutError(f"timed out waiting for {what}")
+            self._pump(min(left, 0.25))
+
+    # -- public API ---------------------------------------------------------
+
+    def accept_clients(self, n: int, timeout: Optional[float] = None):
+        """Block until n distinct clients have connected and said HELLO."""
+        self._wait(lambda: len(self._conns) >= n,
+                   f"{n} clients (have {len(self._conns)})", timeout)
+        return self.clients
+
+    def recv(self, timeout: Optional[float] = None):
+        """Next (client_id, Frame) event; Frame is None when that client
+        disconnected (it has already been deregistered)."""
+        self._wait(lambda: self._events, "a frame", timeout)
+        return self._events.pop(0)
+
+    def send(self, client_id: int, kind: int, version: int,
+             payload: bytes = b"") -> bool:
+        """Send one frame; False (plus drop bookkeeping) if the client is
+        gone — the caller decides whether that ends the round for them."""
+        conn = self._conns.get(client_id)
+        if conn is None:
+            return False
+        try:
+            write_frame(conn.sock, kind, version, payload)
+        except (BrokenPipeError, ConnectionResetError, OSError,
+                TransportError):
+            self._disconnect(conn)
+            return False
+        self.overhead_down += HDR.size
+        if kind == KIND_BCAST:
+            self.bytes_down.setdefault(client_id, 0.0)
+            self.bytes_down[client_id] += len(payload)
+        else:
+            self.overhead_down += len(payload)
+        return True
+
+    def close(self):
+        for conn in list(self._conns.values()):
+            try:
+                self._sel.unregister(conn.sock)
+            except (KeyError, ValueError):
+                pass
+            conn.sock.close()
+        self._conns.clear()
+        try:
+            self._sel.unregister(self._lsock)
+        except (KeyError, ValueError):
+            pass
+        self._lsock.close()
+        self._sel.close()
+        if self._uds_path and os.path.exists(self._uds_path):
+            try:
+                os.unlink(self._uds_path)
+            except OSError:
+                pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# client side
+# ---------------------------------------------------------------------------
+
+
+class ClientTransport:
+    """Blocking client endpoint: connect + HELLO, then fetch/upload rounds.
+    Every socket operation honors ``timeout`` so a dead server raises
+    ``socket.timeout`` instead of hanging the client process."""
+
+    def __init__(self, address: str, client_id: int, *,
+                 timeout: float = 60.0):
+        self.client_id = int(client_id)
+        family, sockaddr = parse_address(address)
+        self._sock = socket.socket(family, socket.SOCK_STREAM)
+        self._sock.settimeout(timeout)
+        self._sock.connect(sockaddr)
+        write_frame(self._sock, KIND_HELLO, PROTOCOL_VERSION,
+                    json.dumps({"client": self.client_id}).encode())
+
+    def fetch(self, version: int) -> Optional[Frame]:
+        """Request the current broadcast; returns the BCAST frame (or DONE
+        when the run is over, or None if the server hung up)."""
+        write_frame(self._sock, KIND_FETCH, version)
+        frame = self.recv()
+        if frame is not None and frame.kind not in (KIND_BCAST, KIND_DONE):
+            raise TransportError(
+                f"expected BCAST/DONE, got "
+                f"{KIND_NAMES.get(frame.kind, frame.kind)}")
+        return frame
+
+    def upload(self, payload: bytes, version: int, meta: dict):
+        """Ship one round's result: a META control frame (losses, step
+        counts — overhead bytes) followed by the codec payload itself."""
+        write_frame(self._sock, KIND_META, version,
+                    json.dumps(meta, separators=(",", ":")).encode())
+        write_frame(self._sock, KIND_UPLOAD, version, payload)
+
+    def recv(self) -> Optional[Frame]:
+        return read_frame(self._sock)
+
+    def close(self):
+        self._sock.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

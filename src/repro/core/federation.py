@@ -42,6 +42,7 @@ import numpy as np
 from repro.comm import codec
 from repro.comm import network as net
 from repro.comm import pipeline
+from repro.comm import transport as xport
 from repro.comm.server import Broadcaster, BuffServer, ClientUpdate, \
     SyncServer
 from repro.configs.base import ModelConfig
@@ -81,8 +82,10 @@ class FedConfig:
     buffer_size: Optional[int] = None  # async: aggregate every K arrivals
     staleness_alpha: float = 0.5  # async: staleness discount exponent
     server_lr: float = 1.0        # async: server step size on the buffer sum
-    network: Optional[object] = None   # comm.network.SimulatedNetwork
-    step_time_s: float = 0.01     # simulated seconds per local step
+    network: Optional[object] = None   # SimulatedNetwork or comm.transport.Transport
+    step_time_s: float = 0.01     # simulated seconds per local step (the
+    #                               single source of truth — the transport
+    #                               has no default of its own)
 
 
 PARITY_A, PARITY_B, PARITY_BOTH = 0, 1, 2
@@ -210,7 +213,7 @@ class _Ctx:
     n_mod: int
     full_masks: dict
     rng: np.random.Generator
-    net: net.SimulatedNetwork
+    net: object               # comm.transport.Transport
     kd: jax.Array
 
 
@@ -294,32 +297,33 @@ def _client_update(ctx: _Ctx, global_adapters, k, parity, enc_seed):
     return _ClientResult(k, payload, masks, losses, n_steps)
 
 
-def run_federated(cfg: ModelConfig, fed: FedConfig, train_ds, test_ds,
-                  client_indices):
-    """Run the full federated fine-tuning session.  Returns a history dict."""
-    key = jax.random.PRNGKey(fed.seed)
-    kp, ka, kd = jax.random.split(key, 3)
-    params = M.init_params(cfg, kp)
-    rng = np.random.default_rng(fed.seed)
-
+def _shard_clients(train_ds, client_indices):
+    """FedAvg data weights (float64, normalized) + per-client shards."""
     weights = np.array([len(i) for i in client_indices], np.float64)
     weights = weights / weights.sum()
     client_ds = [train_ds.subset(i) if hasattr(train_ds, "subset")
                  else {k: v[i] for k, v in train_ds.items()}
                  for i in client_indices]
+    return weights, client_ds
 
-    history = {"round": [], "acc": [], "loss": [], "uploaded": [],
-               "downloaded": [], "uploaded_cum": 0.0, "downloaded_cum": 0.0,
-               "sim_time": [], "mask_overlap": [], "update_cosine": []}
-    network = fed.network if fed.network is not None \
-        else net.ideal_network(fed.n_clients)
 
+def build_session(cfg: ModelConfig, fed: FedConfig, train_ds, client_indices,
+                  transport):
+    """Deterministic session state for the adapter-track methods: every
+    consumer of the same (cfg, fed, train_ds, client_indices) derives
+    bit-identical params, adapters, and shared-rng stream.  This is what
+    lets each process of a multi-process fleet (launch/fleet.py) rebuild
+    the whole session locally and stay bit-for-bit on the in-process sync
+    trajectory.  Returns (ctx, initial global adapters)."""
     if fed.method == "full_ft":
-        return _run_full_ft(cfg, fed, params, client_ds, weights, test_ds,
-                            history, rng, network)
-
-    r_G = adapter_rank(fed)
-    adapters = lora.init_adapters(cfg, ka, r_G)
+        raise ValueError("full_ft has no adapter session; run_federated "
+                         "handles it on a separate path")
+    key = jax.random.PRNGKey(fed.seed)
+    kp, ka, kd = jax.random.split(key, 3)
+    params = M.init_params(cfg, kp)
+    rng = np.random.default_rng(fed.seed)
+    weights, client_ds = _shard_clients(train_ds, client_indices)
+    adapters = lora.init_adapters(cfg, ka, adapter_rank(fed))
     opt_cfg = adamw.AdamWConfig(lr=fed.lr, weight_decay=fed.weight_decay)
     ctx = _Ctx(cfg=cfg, fed=fed, params=params,
                step=make_local_step(cfg, fed, opt_cfg), client_ds=client_ds,
@@ -329,8 +333,52 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, train_ds, test_ds,
                                  else [fed.rank] * fed.n_clients),
                n_mod=lora.n_modules(cfg),
                full_masks=selection.masks_like(adapters), rng=rng,
-               net=network, kd=kd)
-    evaluate = make_eval(cfg, lora.lora_scale(r_G)) if cfg.is_encoder else None
+               net=transport, kd=kd)
+    return ctx, adapters
+
+
+def skip_client_rng(ctx: _Ctx, k):
+    """Consume exactly the shared-rng draws ``_client_update(ctx, ., k, .)``
+    would, without training.  A fleet client (launch/fleet.py) replays the
+    launch-order stream by calling this for every *other* client's turn, so
+    its own batch permutations land at the same stream positions as in the
+    in-process engine."""
+    fed = ctx.fed
+    ds_k = ctx.client_ds[k]
+    n_k = len(ds_k) if hasattr(ds_k, "__len__") else len(ds_k["labels"])
+    probe = fed.probe_epochs if fed.method == "lora_a2" else 0
+    for _ in range(probe + fed.local_epochs):
+        ctx.rng.permutation(n_k)          # one draw per _batches() call
+    if fed.dp_epsilon is not None:
+        ctx.kd, _ = jax.random.split(ctx.kd)
+
+
+def run_federated(cfg: ModelConfig, fed: FedConfig, train_ds, test_ds,
+                  client_indices):
+    """Run the full federated fine-tuning session.  Returns a history dict."""
+    history = {"round": [], "acc": [], "loss": [], "uploaded": [],
+               "downloaded": [], "uploaded_cum": 0.0, "downloaded_cum": 0.0,
+               "sim_time": [], "mask_overlap": [], "update_cosine": []}
+    network = fed.network if fed.network is not None \
+        else net.ideal_network(fed.n_clients)
+    # every exchange below goes through the Transport interface; wrapping a
+    # SimulatedNetwork is byte-identical to the pre-transport engine (the
+    # adapter passes len(payload), exactly the size the engine used to pass)
+    transport = xport.as_transport(network)
+
+    if fed.method == "full_ft":
+        key = jax.random.PRNGKey(fed.seed)
+        kp, _, _ = jax.random.split(key, 3)
+        params = M.init_params(cfg, kp)
+        rng = np.random.default_rng(fed.seed)
+        weights, client_ds = _shard_clients(train_ds, client_indices)
+        return _run_full_ft(cfg, fed, params, client_ds, weights, test_ds,
+                            history, rng, transport)
+
+    ctx, adapters = build_session(cfg, fed, train_ds, client_indices,
+                                  transport)
+    evaluate = make_eval(cfg, lora.lora_scale(adapter_rank(fed))) \
+        if cfg.is_encoder else None
 
     if fed.server_mode == "async":
         _run_async(ctx, adapters, history, test_ds, evaluate)
@@ -338,7 +386,7 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, train_ds, test_ds,
         _run_sync(ctx, adapters, history, test_ds, evaluate)
     else:
         raise ValueError(fed.server_mode)
-    history["params"] = params
+    history["params"] = ctx.params
     return history
 
 
@@ -360,13 +408,13 @@ def _run_sync(ctx: _Ctx, adapters, history, test_ds, evaluate):
         for k in participants:
             bcast, global_at_client = bcaster.payload_for(
                 k, server.adapters, server.version)
-            down = ctx.net.downlink(k, len(bcast), now=clock.now)
+            down = ctx.net.downlink(k, bcast, now=clock.now)
             history["downloaded_cum"] += len(bcast)
             res = _client_update(ctx, global_at_client, k, parity,
                                  _enc_seed(fed, t, k))
             t_done = down.arrived_at + \
                 ctx.net.compute_time(k, res.n_steps, fed.step_time_s)
-            up = ctx.net.uplink(k, len(res.payload), now=t_done)
+            up = ctx.net.uplink(k, res.payload, now=t_done)
             history["uploaded_cum"] += len(res.payload)
             results.append(res)
             arrivals.append(up.arrived_at if not up.dropped else t_done)
@@ -426,13 +474,13 @@ def _run_async(ctx: _Ctx, adapters, history, test_ds, evaluate):
         parity = _round_parity(fed, launches[k])
         bcast, global_at_client = bcaster.payload_for(k, server.adapters,
                                                       server.version)
-        down = ctx.net.downlink(k, len(bcast), now=now)
+        down = ctx.net.downlink(k, bcast, now=now)
         history["downloaded_cum"] += len(bcast)
         res = _client_update(ctx, global_at_client, k, parity,
                              _enc_seed(fed, server.version + 1, k))
         t_done = down.arrived_at + \
             ctx.net.compute_time(k, res.n_steps, fed.step_time_s)
-        up = ctx.net.uplink(k, len(res.payload), now=t_done)
+        up = ctx.net.uplink(k, res.payload, now=t_done)
         history["uploaded_cum"] += len(res.payload)
         t_arr = up.arrived_at if not up.dropped else t_done
         heapq.heappush(heap, (t_arr, seq, k, res, server.version, parity,
@@ -475,7 +523,7 @@ def _run_async(ctx: _Ctx, adapters, history, test_ds, evaluate):
 
 
 def _run_full_ft(cfg, fed, params, client_ds, weights, test_ds, history, rng,
-                 network):
+                 transport):
     """FedAvg on all base params; uploads travel as dense pytree payloads."""
     opt_cfg = adamw.AdamWConfig(lr=fed.lr)
     step = make_full_ft_step(cfg, opt_cfg)
@@ -493,7 +541,7 @@ def _run_full_ft(cfg, fed, params, client_ds, weights, test_ds, history, rng,
             else codec.decode_dense(bcast)
         deltas, survivors, losses, arrivals = [], [], [], []
         for k in participants:
-            down = network.downlink(k, len(bcast), now=clock.now)
+            down = transport.downlink(k, bcast, now=clock.now)
             history["downloaded_cum"] += len(bcast)
             local, opt_state = client_params, adamw.init_state(client_params)
             ds_k = client_ds[k]
@@ -509,8 +557,8 @@ def _run_full_ft(cfg, fed, params, client_ds, weights, test_ds, history, rng,
                                          codec=fed.codec,
                                          seed=_enc_seed(fed, t, k))
             t_done = down.arrived_at + \
-                network.compute_time(k, n_steps, fed.step_time_s)
-            up = network.uplink(k, len(payload), now=t_done)
+                transport.compute_time(k, n_steps, fed.step_time_s)
+            up = transport.uplink(k, payload, now=t_done)
             history["uploaded_cum"] += len(payload)
             arrivals.append(up.arrived_at if not up.dropped else t_done)
             if not up.dropped:

@@ -1,0 +1,323 @@
+"""Multi-process federation: N OS client processes + a socket server.
+
+``launch_fleet`` is the real-transport twin of the in-process sync engine
+(``core/federation.run_federated``): the parent process owns the
+``SyncServer`` + ``Broadcaster`` behind a ``ServerTransport`` (TCP or
+Unix-domain socket), and each client runs in its own spawned process —
+fetching the broadcast, training its shard locally, and uploading the
+codec payload over the real socket.
+
+Bit-for-bit parity with the in-process engine (fp32 codec) comes from two
+invariants:
+
+* **Deterministic session state.**  Every process rebuilds the identical
+  session from (DataSpec, FedConfig): synthetic data, base params,
+  adapters, and the shared rng stream are all seed-derived
+  (``federation.build_session``), so no tensors need to cross the wire
+  beyond the actual protocol payloads.
+
+* **Shared-rng replay.**  The in-process engine consumes one
+  ``np.random.Generator`` in client-launch order.  Each client process
+  owns a copy of that stream and calls ``federation.skip_client_rng`` for
+  every *other* client's turn, so its own batch permutations land at
+  exactly the same stream positions as in-process.  The server aggregates
+  uploads sorted by client id — the in-process launch order — so FedAvg
+  float arithmetic is order-identical too.
+
+``examples/multiproc_federated.py --check`` (and CI's multiproc-smoke job)
+asserts the result: same eval history, same uploaded/downloaded byte
+totals, bit-identical final adapters.
+
+A client that disconnects mid-round is dropped and the round proceeds
+with the survivors — the socket twin of ``LinkModel.drop_prob`` — and all
+socket waits honor a timeout, so a hung peer raises instead of wedging
+the run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import multiprocessing
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.comm import codec
+from repro.comm import transport as xport
+from repro.comm.server import Broadcaster, ClientUpdate, SyncServer
+from repro.configs.base import get_config
+from repro.core import federation, lora
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_classification
+
+
+@dataclasses.dataclass
+class DataSpec:
+    """Seed-derived dataset recipe every fleet process rebuilds locally.
+    Mirrors the reduced synthetic-classification setup the benchmarks and
+    tests use (benchmarks/common.py)."""
+    arch: str = "roberta-sim"
+    n_classes: int = 8
+    seq_len: int = 16
+    n_train: int = 480
+    n_test: int = 160
+    alpha: float = 0.5
+    seed: int = 0
+
+    def build(self, n_clients: int):
+        cfg = get_config(self.arch)
+        train, test = make_classification(
+            self.seed, n_classes=self.n_classes, vocab=cfg.vocab_size,
+            seq_len=self.seq_len, n_train=self.n_train, n_test=self.n_test)
+        parts = dirichlet_partition(self.seed, train.labels, n_clients,
+                                    self.alpha)
+        return cfg, train, test, parts
+
+
+def check_fleet_config(fed) -> None:
+    """The multi-process driver covers the sync adapter track.  Everything
+    else either needs the simulated clock (async) or shares rng state the
+    replay scheme does not model (partial participation)."""
+    if fed.server_mode != "sync":
+        raise ValueError("launch_fleet is the sync engine's twin; use the "
+                         "simulated transport for async runs")
+    if fed.method == "full_ft":
+        raise ValueError("full_ft is not supported multi-process (dense "
+                         "base-param uploads; use run_federated)")
+    if fed.participation < 1.0:
+        raise ValueError("partial participation draws from the shared rng "
+                         "on the server; the fleet replay scheme requires "
+                         "participation=1.0")
+    if fed.network is not None:
+        raise ValueError("fed.network must be None for a fleet run — the "
+                         "real socket transport is the network")
+    if fed.track_similarity:
+        raise ValueError("track_similarity needs the clients' decoded "
+                         "deltas and masks on the server; the fleet path "
+                         "does not collect them — use run_federated")
+
+
+# ---------------------------------------------------------------------------
+# server side
+# ---------------------------------------------------------------------------
+
+
+def serve(cfg, fed, train_ds, test_ds, client_indices,
+          transport: xport.ServerTransport):
+    """Drive the rounds over an already-listening ServerTransport.  Returns
+    the same history dict shape as run_federated (sim_time is wall-clock
+    seconds here; ``history['traffic']`` carries the transport tally)."""
+    check_fleet_config(fed)
+    ctx, adapters = federation.build_session(cfg, fed, train_ds,
+                                             client_indices, transport)
+    evaluate = federation.make_eval(
+        cfg, lora.lora_scale(federation.adapter_rank(fed))) \
+        if cfg.is_encoder else None
+    server = SyncServer(fed.method, adapters,
+                        r_G=federation.adapter_rank(fed),
+                        client_rank_list=ctx.client_rank_list,
+                        hetlora_gamma=fed.hetlora_gamma)
+    bcaster = Broadcaster(fed.downlink_codec)
+    history = {"round": [], "acc": [], "loss": [], "uploaded": [],
+               "downloaded": [], "uploaded_cum": 0.0, "downloaded_cum": 0.0,
+               "sim_time": [], "mask_overlap": [], "update_cosine": []}
+    t0 = time.monotonic()
+    transport.accept_clients(fed.n_clients)
+    # frames that belong to a later phase (fast clients run ahead: a client
+    # can upload round t and FETCH round t+1 while the server still waits
+    # on a straggler's round-t upload)
+    held = []
+
+    def next_event(want):
+        """Next event this phase can consume: a held frame passing the
+        phase predicate if one is waiting, else the next wire event.  Held
+        frames that fail the predicate stay held — popping them here would
+        spin without ever pumping the socket."""
+        for i, (cid, fr) in enumerate(held):
+            if want(cid, fr):
+                return held.pop(i)
+        return transport.recv()
+
+    def drop(cid, live, pending):
+        pending.discard(cid)
+        live.discard(cid)
+        held[:] = [(c, f) for c, f in held if c != cid]
+
+    for t in range(1, fed.rounds + 1):
+        parity = federation._round_parity(fed, t)
+        live = set(transport.clients)
+
+        # --- fetch phase: answer one FETCH per live client.  The phase
+        # predicate checks ``cid in pending``, not just the frame kind: a
+        # fast client that already fetched, trained, and uploaded this
+        # round can send its *next* round's FETCH while a straggler still
+        # owes this round's — answering it now would hand out the
+        # pre-aggregation state and desynchronize the rounds, so it stays
+        # held until the next fetch phase ---
+        pending = set(live)
+
+        def want_fetch(cid, fr):
+            return fr.kind == xport.KIND_FETCH and cid in pending
+
+        while pending:
+            cid, fr = next_event(want_fetch)
+            if fr is None:
+                drop(cid, live, pending)
+                continue
+            if not want_fetch(cid, fr):      # early finisher of this round
+                held.append((cid, fr))
+                continue
+            payload, _ = bcaster.payload_for(cid, server.adapters,
+                                             server.version)
+            if transport.send(cid, xport.KIND_BCAST, server.version, payload):
+                history["downloaded_cum"] += len(payload)
+            else:
+                live.discard(cid)
+            pending.discard(cid)
+
+        # --- upload phase: collect one upload per live client; a client
+        # that disconnects mid-upload is dropped and the round proceeds
+        # with the survivors (the socket twin of drop_prob).  Same
+        # ``cid in pending`` guard: only this round's META/UPLOAD are
+        # consumed, anything else waits in held ---
+        metas, uploads = {}, {}
+        pending = set(live)
+
+        def want_upload(cid, fr):
+            return fr.kind in (xport.KIND_META, xport.KIND_UPLOAD) \
+                and cid in pending
+
+        while pending:
+            cid, fr = next_event(want_upload)
+            if fr is None:
+                # a client that already uploaded may exit before the round
+                # closes (last round especially) — that is not a drop, so
+                # its meta (losses) stays counted
+                drop(cid, live, pending)
+                continue
+            if not want_upload(cid, fr):
+                held.append((cid, fr))
+                continue
+            if fr.kind == xport.KIND_META:
+                metas[cid] = json.loads(fr.payload.decode())
+            else:
+                uploads[cid] = fr
+                history["uploaded_cum"] += len(fr.payload)
+                pending.discard(cid)
+
+        now = time.monotonic() - t0
+        survivors = sorted(uploads)
+        updates = [ClientUpdate(cid, uploads[cid].payload, ctx.weights[cid],
+                                uploads[cid].version, parity,
+                                arrived_at=now)
+                   for cid in survivors]
+        server.aggregate_round(updates)
+
+        if t % fed.eval_every == 0 or t == fed.rounds:
+            acc = evaluate(ctx.params, server.adapters, test_ds) \
+                if evaluate else float("nan")
+            # every client that reported a meta trained this round — like
+            # the in-process engine, whose loss mean includes clients whose
+            # uplink then dropped
+            losses = [l for cid in sorted(metas)
+                      for l in metas[cid].get("losses", [])]
+            history["round"].append(t)
+            history["acc"].append(acc)
+            history["loss"].append(float(np.mean(losses)) if losses
+                                   else float("nan"))
+            history["uploaded"].append(history["uploaded_cum"])
+            history["downloaded"].append(history["downloaded_cum"])
+            history["sim_time"].append(time.monotonic() - t0)
+
+    for cid in transport.clients:
+        transport.send(cid, xport.KIND_DONE, server.version)
+    history["adapters"] = server.adapters
+    history["params"] = ctx.params
+    history["traffic"] = transport.traffic()
+    return history
+
+
+# ---------------------------------------------------------------------------
+# client side (runs in a separate OS process)
+# ---------------------------------------------------------------------------
+
+
+def run_client(client_id: int, spec: DataSpec, fed, address: str,
+               timeout: float = 120.0):
+    """One client process: rebuild the session from seeds, then per round
+    fetch → reconstruct global state → train own shard → upload."""
+    check_fleet_config(fed)
+    cfg, train, _test, parts = spec.build(fed.n_clients)
+    ctx, _ = federation.build_session(cfg, fed, train, parts, None)
+    state = None
+    with xport.ClientTransport(address, client_id, timeout=timeout) as ct:
+        for t in range(1, fed.rounds + 1):
+            parity = federation._round_parity(fed, t)
+            fr = ct.fetch(t - 1)
+            if fr is None or fr.kind == xport.KIND_DONE:
+                break
+            # reconstruct exactly what the Broadcaster's in-process clients
+            # see: dense payloads decode, delta payloads overwrite onto the
+            # previous state (first delta fetch is dense fp32)
+            if fed.downlink_codec == "delta" and state is not None:
+                state = codec.apply_update(state, fr.payload)
+            else:
+                state = codec.decode(fr.payload)
+            for j in range(fed.n_clients):
+                if j != client_id:
+                    federation.skip_client_rng(ctx, j)
+                    continue
+                res = federation._client_update(
+                    ctx, state, j, parity, federation._enc_seed(fed, t, j))
+                ct.upload(res.payload, fr.version,
+                          meta={"client": j, "parity": parity,
+                                "n_steps": res.n_steps,
+                                "losses": res.losses})
+
+
+# ---------------------------------------------------------------------------
+# the fleet launcher
+# ---------------------------------------------------------------------------
+
+
+def default_address(transport: str = "uds") -> str:
+    if transport == "uds":
+        return "uds:" + os.path.join(
+            tempfile.mkdtemp(prefix="repro-fleet-"), "fleet.sock")
+    if transport == "tcp":
+        return "tcp:127.0.0.1:0"       # ephemeral port, resolved at bind
+    raise ValueError(f"unknown transport {transport!r}; want 'uds' or 'tcp'")
+
+
+def launch_fleet(spec: DataSpec, fed, *, transport: str = "uds",
+                 address: str | None = None, timeout: float = 120.0):
+    """Fork fed.n_clients client processes (spawn — each re-imports jax
+    cleanly) and serve them from this process.  Returns the server history.
+
+    ``timeout`` bounds every socket wait on both sides: a hung client makes
+    the server raise TimeoutError instead of eating the CI job budget."""
+    check_fleet_config(fed)
+    if address is None:
+        address = default_address(transport)
+    mp = multiprocessing.get_context("spawn")
+    st = xport.ServerTransport(address, timeout=timeout)
+    procs = [mp.Process(target=run_client,
+                        args=(k, spec, fed, st.address, timeout),
+                        daemon=True)
+             for k in range(fed.n_clients)]
+    try:
+        for p in procs:
+            p.start()
+        cfg, train, test, parts = spec.build(fed.n_clients)
+        history = serve(cfg, fed, train, test, parts, st)
+        for p in procs:
+            p.join(timeout=timeout)
+        return history
+    finally:
+        st.close()
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+                p.join(timeout=5)

@@ -1,0 +1,504 @@
+"""comm.transport torture coverage: frame reassembly under partial reads,
+frames larger than one send, client death mid-upload (server drops it and
+the round proceeds — the socket twin of drop_prob), version-skew fetches
+against the delta Broadcaster, and engine identity under the Transport
+refactor (simulated path must stay byte- and trajectory-identical)."""
+import json
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.comm import codec, network, server, transport as xport
+from repro.configs.base import get_config
+from repro.core import lora, selection
+from repro.core.federation import FedConfig, run_federated
+from repro.launch import fleet
+from repro.utils import tree_add, tree_sub
+
+CFG = get_config("roberta-sim")
+
+
+def _uds(tmp_path):
+    return f"uds:{tmp_path}/t.sock"
+
+
+# ---------------------------------------------------------------------------
+# frame layer
+# ---------------------------------------------------------------------------
+
+
+def test_frame_header_layout():
+    """u32 length + u8 kind + u32 version, little-endian — 9 bytes."""
+    assert xport.HDR.size == 9
+    buf = xport.FrameBuffer()
+    raw = xport.HDR.pack(3, xport.KIND_UPLOAD, 7) + b"abc"
+    (fr,) = buf.feed(raw)
+    assert (fr.kind, fr.version, fr.payload) == (xport.KIND_UPLOAD, 7, b"abc")
+
+
+def test_framebuffer_one_byte_at_a_time():
+    """Partial reads: frames reassemble from 1-byte feeds, across multiple
+    back-to-back frames, with no bytes lost at the boundaries."""
+    frames = [(xport.KIND_BCAST, 0, b"x" * 300),
+              (xport.KIND_META, 4, b'{"a":1}'),
+              (xport.KIND_FETCH, 9, b"")]
+    raw = b"".join(xport.HDR.pack(len(p), k, v) + p for k, v, p in frames)
+    buf, out = xport.FrameBuffer(), []
+    for i in range(len(raw)):
+        n_before = len(out)
+        out += buf.feed(raw[i:i + 1])
+        if len(out) == n_before:
+            # a partial frame must be visible (mid-frame EOF detection);
+            # at frame boundaries the buffer drains completely
+            assert buf.incomplete
+    assert not buf.incomplete
+    assert [(f.kind, f.version, f.payload) for f in out] == frames
+
+
+def test_framebuffer_rejects_oversize_length():
+    buf = xport.FrameBuffer()
+    with pytest.raises(xport.TransportError):
+        buf.feed(xport.HDR.pack(xport.MAX_FRAME + 1, xport.KIND_UPLOAD, 0))
+
+
+def test_read_frame_partial_reads_over_socketpair():
+    """read_frame loops over however many recvs the kernel needs — here the
+    peer dribbles the frame one byte at a time."""
+    a, b = socket.socketpair()
+    payload = bytes(range(256)) * 3
+    raw = xport.HDR.pack(len(payload), xport.KIND_UPLOAD, 5) + payload
+
+    def dribble():
+        for i in range(len(raw)):
+            a.sendall(raw[i:i + 1])
+            if i % 97 == 0:
+                time.sleep(0.001)
+        a.close()
+
+    t = threading.Thread(target=dribble)
+    t.start()
+    b.settimeout(10)
+    fr = xport.read_frame(b)
+    assert (fr.kind, fr.version, fr.payload) == (xport.KIND_UPLOAD, 5, payload)
+    assert xport.read_frame(b) is None     # clean EOF at a frame boundary
+    t.join()
+    b.close()
+
+
+def test_frame_larger_than_one_send():
+    """An 8 MiB frame spans many send()/recv() windows; both the blocking
+    reader and the FrameBuffer path must reassemble it bit-exactly."""
+    a, b = socket.socketpair()
+    payload = np.random.default_rng(0).integers(
+        0, 256, size=8 << 20, dtype=np.uint8).tobytes()
+    t = threading.Thread(
+        target=lambda: xport.write_frame(a, xport.KIND_BCAST, 2, payload))
+    t.start()
+    b.settimeout(30)
+    fr = xport.read_frame(b)
+    t.join()
+    assert fr.kind == xport.KIND_BCAST and fr.payload == payload
+    a.close(), b.close()
+
+
+def test_read_frame_raises_on_mid_frame_eof():
+    a, b = socket.socketpair()
+    a.sendall(xport.HDR.pack(100, xport.KIND_UPLOAD, 0) + b"only-half")
+    a.close()
+    b.settimeout(10)
+    with pytest.raises(xport.TransportError, match="mid-frame"):
+        xport.read_frame(b)
+    b.close()
+
+
+def test_parse_address_forms():
+    assert xport.parse_address("uds:/tmp/x.sock") == \
+        (socket.AF_UNIX, "/tmp/x.sock")
+    assert xport.parse_address("tcp:127.0.0.1:80") == \
+        (socket.AF_INET, ("127.0.0.1", 80))
+    for bad in ("http://x", "tcp:nohost", "udp:1:2"):
+        with pytest.raises(ValueError):
+            xport.parse_address(bad)
+
+
+# ---------------------------------------------------------------------------
+# server/client endpoints
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("addr", ["uds", "tcp:127.0.0.1:0"])
+def test_server_client_roundtrip_and_traffic(addr, tmp_path):
+    """HELLO/FETCH/BCAST/META/UPLOAD over a real socket (both families);
+    traffic() counts only BCAST/UPLOAD payload bytes — the numbers the
+    simulated backend reports — and control/framing separately."""
+    spec = _uds(tmp_path) if addr == "uds" else addr
+    with xport.ServerTransport(spec, timeout=10) as st:
+        def client():
+            with xport.ClientTransport(st.address, 3, timeout=10) as ct:
+                fr = ct.fetch(0)
+                assert (fr.kind, fr.version) == (xport.KIND_BCAST, 0)
+                ct.upload(b"u" * 1000, 0, {"losses": [1.0]})
+                assert ct.recv().kind == xport.KIND_DONE
+
+        th = threading.Thread(target=client)
+        th.start()
+        st.accept_clients(1)
+        cid, fr = st.recv()
+        assert (cid, fr.kind) == (3, xport.KIND_FETCH)
+        assert st.send(3, xport.KIND_BCAST, 0, b"d" * 500)
+        cid, fr = st.recv()
+        assert fr.kind == xport.KIND_META
+        assert json.loads(fr.payload) == {"losses": [1.0]}
+        cid, fr = st.recv()
+        assert (fr.kind, len(fr.payload)) == (xport.KIND_UPLOAD, 1000)
+        st.send(3, xport.KIND_DONE, 0)
+        th.join()
+        t = st.traffic()
+        assert t["total_up"] == 1000 and t["total_down"] == 500
+        assert list(t["uplink_bytes"])[3] == 1000
+        assert t["overhead_up"] > 0 and t["overhead_down"] > 0
+    assert not (spec.startswith("uds:") and
+                __import__("os").path.exists(spec[4:]))  # socket unlinked
+
+
+def test_client_disconnect_mid_upload_is_dropped(tmp_path):
+    """A client that dies with an upload frame half-sent surfaces once as
+    (cid, None) and is deregistered — the server can proceed without it."""
+    with xport.ServerTransport(_uds(tmp_path), timeout=10) as st:
+        raw = socket.socket(socket.AF_UNIX)
+        raw.connect(st.address[4:])
+        xport.write_frame(raw, xport.KIND_HELLO, xport.PROTOCOL_VERSION,
+                          b'{"client": 0}')
+        xport.write_frame(raw, xport.KIND_FETCH, 0)
+        st.accept_clients(1)
+        cid, fr = st.recv()
+        assert (cid, fr.kind) == (0, xport.KIND_FETCH)
+        # half an upload frame, then death
+        raw.sendall(xport.HDR.pack(10_000, xport.KIND_UPLOAD, 0) + b"partial")
+        raw.close()
+        cid, fr = st.recv()
+        assert (cid, fr) == (0, None)
+        assert st.clients == []
+        assert not st.send(0, xport.KIND_BCAST, 0, b"x")   # gone is gone
+
+
+def test_hello_out_of_range_client_id_raises(tmp_path):
+    """traffic() builds dense per-client arrays, so a negative or absurd
+    HELLO id is rejected instead of aliasing another client's tally."""
+    for bad in (-1, xport.MAX_CLIENTS):
+        with xport.ServerTransport(_uds(tmp_path), timeout=10) as st:
+            raw = socket.socket(socket.AF_UNIX)
+            raw.connect(st.address[4:])
+            xport.write_frame(raw, xport.KIND_HELLO, xport.PROTOCOL_VERSION,
+                              json.dumps({"client": bad}).encode())
+            with pytest.raises(xport.TransportError, match="out of range"):
+                st.accept_clients(1, timeout=5)
+            raw.close()
+
+
+def test_fleet_rejects_unsupported_configs():
+    for kw in (dict(server_mode="async"), dict(method="full_ft"),
+               dict(participation=0.5), dict(track_similarity=True),
+               dict(network=network.ideal_network(2))):
+        with pytest.raises(ValueError):
+            fleet.check_fleet_config(_fed(**kw))
+
+
+def test_hello_protocol_version_skew_raises(tmp_path):
+    with xport.ServerTransport(_uds(tmp_path), timeout=10) as st:
+        raw = socket.socket(socket.AF_UNIX)
+        raw.connect(st.address[4:])
+        xport.write_frame(raw, xport.KIND_HELLO, xport.PROTOCOL_VERSION + 1,
+                          b'{"client": 0}')
+        with pytest.raises(xport.TransportError, match="version skew"):
+            st.accept_clients(1, timeout=5)
+        raw.close()
+
+
+def test_server_timeout_on_hung_client(tmp_path):
+    """A connected-but-silent client cannot wedge the server: recv raises
+    TimeoutError after the configured bound (the CI hard-timeout story)."""
+    with xport.ServerTransport(_uds(tmp_path), timeout=0.4) as st:
+        with xport.ClientTransport(st.address, 0, timeout=5):
+            st.accept_clients(1)
+            t0 = time.monotonic()
+            with pytest.raises(TimeoutError):
+                st.recv()
+            assert time.monotonic() - t0 < 5
+
+
+# ---------------------------------------------------------------------------
+# version-skew fetch against the delta Broadcaster
+# ---------------------------------------------------------------------------
+
+
+def _adapters(seed, rank=4):
+    return lora.init_adapters(CFG, jax.random.PRNGKey(seed), rank)
+
+
+def _dense_state(adapters):
+    return codec.decode(codec.encode(adapters, selection.masks_like(adapters),
+                                     2, codec="fp32"))
+
+
+def test_version_skew_fetch_returns_correct_broadcaster_delta(tmp_path):
+    """A client that last fetched version 0 while the server advanced to
+    version 2 gets, over the socket, exactly the Broadcaster delta covering
+    both missed aggregations; overwrite-reconstruction is bit-exact."""
+    g0 = _adapters(0)
+    masks = selection.first_k_masks(g0, 2)
+    step1 = selection.mask_delta(tree_sub(_adapters(1), g0), masks, 1)
+    g1 = tree_add(g0, step1)
+    step2 = selection.mask_delta(tree_sub(_adapters(2), g0), masks, 0)
+    g2 = tree_add(g1, step2)
+
+    bc = server.Broadcaster("delta")
+    versions = {0: g0, 1: g1, 2: g2}
+    with xport.ServerTransport(_uds(tmp_path), timeout=10) as st:
+        got = {}
+
+        def client():
+            state = None
+            with xport.ClientTransport(st.address, 0, timeout=10) as ct:
+                for v in (0, 2):        # never fetches version 1: skew
+                    fr = ct.fetch(v)
+                    state = codec.decode(fr.payload) if state is None \
+                        else codec.apply_update(state, fr.payload)
+                    got[fr.version] = (len(fr.payload), state)
+
+        th = threading.Thread(target=client)
+        th.start()
+        st.accept_clients(1)
+        for _ in range(2):
+            cid, fr = st.recv()
+            assert fr.kind == xport.KIND_FETCH
+            # the server state moved 0 -> 1 -> 2 between this client's
+            # fetches; the Broadcaster's per-client baseline covers the gap
+            payload, _ = bc.payload_for(cid, versions[fr.version], fr.version)
+            st.send(cid, xport.KIND_BCAST, fr.version, payload)
+        th.join()
+
+    # first fetch: dense fp32 of g0; second: delta across versions 1+2
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(got[0][1])[0]),
+        np.asarray(jax.tree.leaves(_dense_state(g0))[0]))
+    for x, y in zip(jax.tree.leaves(got[2][1]),
+                    jax.tree.leaves(_dense_state(g2))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert got[2][0] < got[0][0]   # the skew delta still beats dense
+
+
+# ---------------------------------------------------------------------------
+# engine identity under the Transport refactor
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def data():
+    from repro.data.partition import dirichlet_partition
+    from repro.data.synthetic import make_classification
+    train, test = make_classification(0, n_classes=8, vocab=CFG.vocab_size,
+                                      seq_len=16, n_train=480, n_test=160)
+    parts = dirichlet_partition(0, train.labels, 4, alpha=0.5)
+    return train, test, parts
+
+
+def _fed(**kw):
+    base = dict(method="lora_a2", rank=2, global_rank=4, rounds=2,
+                local_epochs=1, batch_size=32, n_clients=4, eval_every=1,
+                seed=0)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def test_simulated_transport_wrap_is_identity(data):
+    """Acceptance (refactor): routing the engine through the Transport
+    interface leaves the simulated path byte- and trajectory-identical —
+    a pre-wrapped SimulatedTransport and a raw SimulatedNetwork give the
+    same history and the same transport tallies."""
+    train, test, parts = data
+    net_a = network.ideal_network(4)
+    net_b = network.ideal_network(4)
+    h_raw = run_federated(CFG, _fed(network=net_a), train, test, parts)
+    h_wrap = run_federated(
+        CFG, _fed(network=xport.SimulatedTransport(net_b)),
+        train, test, parts)
+    assert h_raw["acc"] == h_wrap["acc"]
+    assert h_raw["loss"] == h_wrap["loss"]
+    assert h_raw["uploaded"] == h_wrap["uploaded"]
+    assert h_raw["downloaded"] == h_wrap["downloaded"]
+    assert net_a.traffic()["total_up"] == net_b.traffic()["total_up"]
+    assert net_a.traffic()["total_down"] == net_b.traffic()["total_down"]
+
+
+def test_compute_time_has_no_default_step_time():
+    """FedConfig.step_time_s is the single source of truth — the network
+    deliberately requires it (the old 0.01 default shadowed the config)."""
+    netw = network.ideal_network(1)
+    with pytest.raises(TypeError):
+        netw.compute_time(0, 10)
+    assert netw.compute_time(0, 10, 0.02) == pytest.approx(0.2)
+
+
+# ---------------------------------------------------------------------------
+# fleet: mid-round client death + multi-process parity
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_serve_drops_dead_client_and_round_proceeds(tmp_path):
+    """Torture: one real client (thread) + one client that fetches, then
+    dies with its upload half-sent.  The server drops it mid-round —
+    mirroring drop_prob semantics — finishes the round on the survivor,
+    and the survivor's weight renormalizes."""
+    spec = fleet.DataSpec(n_train=160, n_test=64)
+    fed = _fed(rounds=1, n_clients=2)
+    cfg, train, test, parts = spec.build(2)
+    st = xport.ServerTransport(_uds(tmp_path), timeout=30)
+
+    def good_client():
+        fleet.run_client(0, spec, fed, st.address, timeout=30)
+
+    def bad_client():
+        raw = socket.socket(socket.AF_UNIX)
+        raw.connect(st.address[4:])
+        raw.settimeout(30)
+        xport.write_frame(raw, xport.KIND_HELLO, xport.PROTOCOL_VERSION,
+                          b'{"client": 1}')
+        xport.write_frame(raw, xport.KIND_FETCH, 0)
+        fr = xport.read_frame(raw)            # receives the broadcast...
+        assert fr.kind == xport.KIND_BCAST
+        raw.sendall(xport.HDR.pack(50_000, xport.KIND_UPLOAD, 0) + b"trunc")
+        raw.close()                           # ...and dies mid-upload
+
+    threads = [threading.Thread(target=good_client),
+               threading.Thread(target=bad_client)]
+    for th in threads:
+        th.start()
+    try:
+        hist = fleet.serve(cfg, fed, train, test, parts, st)
+    finally:
+        st.close()
+        for th in threads:
+            th.join()
+    assert hist["round"] == [1]
+    assert np.isfinite(hist["acc"][0])
+    # both clients fetched the broadcast; only the survivor's upload counts
+    tr = hist["traffic"]
+    assert tr["downlink_bytes"][0] > 0 and tr["downlink_bytes"][1] > 0
+    assert tr["uplink_bytes"][0] > 0 and tr["uplink_bytes"][1] == 0
+    assert hist["uploaded_cum"] == tr["total_up"]
+
+
+def test_fast_client_next_round_fetch_is_not_answered_early(tmp_path):
+    """Race regression: client F fetches, trains, uploads, and sends its
+    round-2 FETCH all before straggler S sends its round-1 FETCH.  The
+    server must hold F's round-2 FETCH until the round actually advances —
+    answering it early would hand out the pre-aggregation state and break
+    the bit-for-bit parity CI asserts."""
+    spec = fleet.DataSpec(n_train=160, n_test=64)
+    fed = _fed(rounds=2, n_clients=2)
+    cfg, train, test, parts = spec.build(2)
+    adapters = lora.init_adapters(CFG, jax.random.PRNGKey(0), 4)
+    zero = jax.tree.map(lambda x: np.zeros_like(np.asarray(x)), adapters)
+    full = selection.masks_like(adapters)
+
+    def payload_for_round(t):
+        parity = 1 if t % 2 else 0         # lora_a2 alternating parity
+        return codec.encode(zero, full, parity)
+
+    st = xport.ServerTransport(_uds(tmp_path), timeout=30)
+    f_versions, errors = [], []
+    s_may_fetch = threading.Event()
+
+    def fast_client():
+        try:
+            raw = socket.socket(socket.AF_UNIX)
+            raw.connect(st.address[4:])
+            raw.settimeout(30)
+            xport.write_frame(raw, xport.KIND_HELLO, xport.PROTOCOL_VERSION,
+                              b'{"client": 0}')
+            xport.write_frame(raw, xport.KIND_FETCH, 0)
+            fr = xport.read_frame(raw)
+            f_versions.append(fr.version)
+            xport.write_frame(raw, xport.KIND_META, 0, b'{"losses": [1.0]}')
+            xport.write_frame(raw, xport.KIND_UPLOAD, 0, payload_for_round(1))
+            # round-2 FETCH goes out while S still owes its round-1 FETCH
+            xport.write_frame(raw, xport.KIND_FETCH, 1)
+            s_may_fetch.set()
+            fr = xport.read_frame(raw)
+            f_versions.append(fr.version)
+            xport.write_frame(raw, xport.KIND_META, 1, b'{"losses": [1.0]}')
+            xport.write_frame(raw, xport.KIND_UPLOAD, 1, payload_for_round(2))
+            raw.close()
+        except Exception as e:  # surface thread failures in the test body
+            errors.append(e)
+            s_may_fetch.set()
+
+    def slow_client():
+        try:
+            raw = socket.socket(socket.AF_UNIX)
+            raw.connect(st.address[4:])
+            raw.settimeout(30)
+            xport.write_frame(raw, xport.KIND_HELLO, xport.PROTOCOL_VERSION,
+                              b'{"client": 1}')
+            s_may_fetch.wait(timeout=30)
+            time.sleep(0.2)    # let F's round-2 FETCH reach the server first
+            for t in (1, 2):
+                xport.write_frame(raw, xport.KIND_FETCH, t - 1)
+                xport.read_frame(raw)
+                xport.write_frame(raw, xport.KIND_META, t - 1,
+                                  b'{"losses": [1.0]}')
+                xport.write_frame(raw, xport.KIND_UPLOAD, t - 1,
+                                  payload_for_round(t))
+            raw.close()
+        except Exception as e:
+            errors.append(e)
+
+    threads = [threading.Thread(target=fast_client),
+               threading.Thread(target=slow_client)]
+    for th in threads:
+        th.start()
+    try:
+        hist = fleet.serve(cfg, fed, train, test, parts, st)
+    finally:
+        st.close()
+        for th in threads:
+            th.join()
+    assert not errors, errors
+    # F saw version 0, then 1 (post-aggregation); with the race the server
+    # would answer the early round-2 FETCH with version 0 again
+    assert f_versions == [0, 1]
+    assert hist["round"] == [1, 2]
+
+
+@pytest.mark.slow
+def test_launch_fleet_matches_inprocess_bit_for_bit(tmp_path):
+    """Acceptance: real OS client processes over a Unix socket reproduce
+    the in-process sync fp32 trajectory exactly — eval history, byte
+    totals, final adapters (the CI multiproc-smoke job runs the 4-client
+    variant via examples/multiproc_federated.py --check)."""
+    spec = fleet.DataSpec()
+    fed = _fed(rounds=2, n_clients=2)
+    hist = fleet.launch_fleet(spec, fed, transport="uds",
+                              address=_uds(tmp_path), timeout=180)
+    cfg, train, test, parts = spec.build(2)
+    net_ref = network.ideal_network(2)
+    import dataclasses
+    ref = run_federated(cfg, dataclasses.replace(fed, network=net_ref),
+                        train, test, parts)
+    assert hist["round"] == ref["round"]
+    assert hist["acc"] == ref["acc"]
+    assert hist["loss"] == ref["loss"]
+    assert hist["uploaded"] == ref["uploaded"]
+    assert hist["downloaded"] == ref["downloaded"]
+    sim = net_ref.traffic()
+    assert hist["traffic"]["total_up"] == sim["total_up"]
+    assert hist["traffic"]["total_down"] == sim["total_down"]
+    for x, y in zip(jax.tree.leaves(hist["adapters"]),
+                    jax.tree.leaves(ref["adapters"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

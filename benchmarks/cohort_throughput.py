@@ -1,0 +1,138 @@
+"""Cohort execution throughput: looped vs vectorized backend (ISSUE 4).
+
+Times the engine's *compute stage* — ``executor.run_cohort`` on one full
+round's cohort — directly.  The compute stage is rng-free by construction
+(the plan stage consumed the shared rng already), so the identical cohort
+re-runs any number of times: each backend warms once (compile excluded)
+and the best of ``REPS`` alternating repetitions is kept, which cancels
+the container's wall-clock drift that a whole-session marginal cannot.
+
+The two backends' outputs are asserted *bit-identical* (final adapters,
+losses, masks) before any timing is recorded — a speedup over a wrong
+answer is not a speedup — and the per-client upload payloads they encode
+are byte-identical, recorded as ``uploaded_bytes`` (deterministic; the
+``benchmarks/run.py --check`` gate compares it against the committed
+artifact).
+
+The cohort is balanced (equal shards): this bench measures the execution
+engine, not data skew.  Under skewed shards the vectorized backend pads
+clients to their step bucket (core/executors._step_buckets caps the waste
+at ~12.5%), which gives back part of the balanced-cohort win; the parity
+suite covers those paths.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.comm import network as net
+from repro.comm import transport as xport
+from repro.core import executors, federation
+from repro.core.federation import FedConfig
+
+REPS = 3
+
+
+def _fed(method, executor, n_clients, seed):
+    return FedConfig(method=method, rank=2, global_rank=8, rounds=1,
+                     local_epochs=common.LOCAL_EPOCHS, batch_size=32,
+                     n_clients=n_clients, seed=seed, executor=executor)
+
+
+def _cohort(method, executor, n_clients, seed=common.SEED):
+    """Build one round's (ctx, entries, plans) for a balanced cohort."""
+    cfg, train, _test = common.dataset(seed)
+    shard = len(train) // n_clients
+    parts = [np.arange(k * shard, (k + 1) * shard)
+             for k in range(n_clients)]
+    fed = _fed(method, executor, n_clients, seed)
+    transport = xport.as_transport(net.ideal_network(n_clients))
+    ctx, adapters = federation.build_session(cfg, fed, train, parts,
+                                             transport)
+    parity = federation._round_parity(fed, 1)
+    entries = [executors.CohortEntry(k, adapters, parity,
+                                     federation._enc_seed(fed, 1, k))
+               for k in range(n_clients)]
+    plans = [executors.plan_client(fed, ctx.rng, ctx.client_ds[k], k)
+             for k in range(n_clients)]
+    return ctx, entries, plans
+
+
+def _run(ctx, entries, plans):
+    outs = ctx.executor.run_cohort(ctx, entries, plans)
+    jax.block_until_ready([o.final for o in outs])
+    return outs
+
+
+def _assert_bit_equal(outs_a, outs_b):
+    for a, b in zip(outs_a, outs_b):
+        assert a.losses == b.losses
+        for x, y in zip(jax.tree.leaves(a.final), jax.tree.leaves(b.final)):
+            assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+        if a.masks is not None:
+            for x, y in zip(jax.tree.leaves(a.masks),
+                            jax.tree.leaves(b.masks)):
+                assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+
+
+def main(quick=True):
+    methods = ["lora_a2"] if quick else ["lora_a2", "fl_lora", "hetlora"]
+    n_clients = common.N_CLIENTS
+    rows = []
+    for method in methods:
+        sessions = {name: _cohort(method, name, n_clients)
+                    for name in ("looped", "vectorized")}
+        outs, best = {}, {}
+        for name, (ctx, entries, plans) in sessions.items():
+            outs[name] = _run(ctx, entries, plans)        # warm: compiles
+            best[name] = float("inf")
+        _assert_bit_equal(outs["looped"], outs["vectorized"])
+        for _ in range(REPS):                 # alternate to cancel drift
+            for name, (ctx, entries, plans) in sessions.items():
+                t0 = time.perf_counter()
+                _run(ctx, entries, plans)
+                best[name] = min(best[name], time.perf_counter() - t0)
+
+        # deterministic byte accounting: both backends must encode the
+        # same wire payloads from their (bit-identical) outputs
+        payloads = {}
+        for name, (ctx, entries, plans) in sessions.items():
+            payloads[name] = [
+                federation._client_payload(ctx, e, o).payload
+                for e, o in zip(entries, outs[name])]
+        assert payloads["looped"] == payloads["vectorized"]
+        uploaded = sum(len(p) for p in payloads["looped"])
+
+        steps = sum(p.n_steps for p in sessions["looped"][2])
+        row = {"method": method, "n_clients": n_clients,
+               "cohort_steps": steps,
+               "looped_round_s": round(best["looped"], 4),
+               "vectorized_round_s": round(best["vectorized"], 4),
+               "looped_clients_per_s":
+                   round(n_clients / best["looped"], 3),
+               "vectorized_clients_per_s":
+                   round(n_clients / best["vectorized"], 3),
+               "looped_steps_per_s": round(steps / best["looped"], 2),
+               "vectorized_steps_per_s":
+                   round(steps / best["vectorized"], 2),
+               "speedup": round(best["looped"] / best["vectorized"], 3),
+               "uploaded_bytes": uploaded}
+        rows.append(row)
+        print(f"cohort_throughput/{method},"
+              f"{best['looped'] * 1e6:.0f},"
+              f"looped={row['looped_clients_per_s']:.2f}c/s;"
+              f"vectorized={row['vectorized_clients_per_s']:.2f}c/s;"
+              f"speedup={row['speedup']:.2f}x")
+    common.save("cohort_throughput", rows)
+    slow = [r for r in rows if r["speedup"] < 1.0]
+    if slow:
+        print(f"# WARNING: vectorized slower than looped on "
+              f"{[r['method'] for r in slow]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

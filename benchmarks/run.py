@@ -27,8 +27,8 @@ import sys
 import time
 import traceback
 
-from benchmarks import (async_stragglers, codec_accuracy, comm_cost,
-                        fig3_rank_selection, fig6_alternating,
+from benchmarks import (async_stragglers, codec_accuracy, cohort_throughput,
+                        comm_cost, fig3_rank_selection, fig6_alternating,
                         fig8_convergence, fig10_client_drift,
                         table1_main_grid, table2_model_scale, table4_dp,
                         table7_pathologic, table8_resource_het,
@@ -48,15 +48,18 @@ TABLES = {
     "comm": comm_cost.main,
     "codec": codec_accuracy.main,
     "async": async_stragglers.main,
+    "cohort": cohort_throughput.main,
 }
 
 # benches the --check gate covers: name -> committed artifact filename
-# (benchmarks/common.py save()).  Only these two report measured-bytes
-# fields; their quick-pass output is deterministic, so the committed
-# baselines are quick-pass artifacts.
+# (benchmarks/common.py save()).  These report measured-bytes fields whose
+# quick-pass output is deterministic, so the committed baselines are
+# quick-pass artifacts.  (cohort also asserts looped/vectorized trajectory
+# parity internally; its timing fields are not gated — only its bytes.)
 ARTIFACTS = {
     "comm": "comm_cost",
     "codec": "codec_accuracy",
+    "cohort": "cohort_throughput",
 }
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 REGRESSION_TOL = 0.01   # fail when measured bytes grow by more than 1%

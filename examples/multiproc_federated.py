@@ -40,13 +40,19 @@ def main():
                          "instead of wedging the run")
     ap.add_argument("--check", action="store_true",
                     help="re-run in-process and assert bit-for-bit parity")
+    ap.add_argument("--executor", default="looped",
+                    choices=["looped", "vectorized"],
+                    help="cohort compute backend (core/executors.py); a "
+                         "fleet client is a cohort of one, so both "
+                         "backends are bit-identical here")
     args = ap.parse_args()
 
     spec = fleet.DataSpec()
     fed = FedConfig(method="lora_a2", rank=2, global_rank=4,
                     rounds=args.rounds, local_epochs=1, batch_size=32,
                     n_clients=args.clients, eval_every=1, seed=0,
-                    codec=args.codec, downlink_codec=args.downlink)
+                    codec=args.codec, downlink_codec=args.downlink,
+                    executor=args.executor)
 
     t0 = time.time()
     hist = fleet.launch_fleet(spec, fed, transport=args.transport,

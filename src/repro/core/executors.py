@@ -1,0 +1,518 @@
+"""Cohort execution engine: pluggable backends for the client-compute stage.
+
+The federated engine (core/federation.py) decomposes each client round into
+three stages:
+
+    plan      host-side data prep — batch permutations drawn from the shared
+              rng in launch order (``plan_client``; the ONLY rng consumer,
+              so both backends replay the identical stream)
+    compute   local training — a ``ClientExecutor`` backend
+    payload   per-client upload extraction through the unchanged comm
+              pipeline (clip → quantize → privatize → encode)
+
+Two backends implement the compute stage:
+
+    LoopedExecutor      the reference path: one ``jax.jit`` dispatch per
+                        batch per client (the engine's historical
+                        ``_client_update`` loop, bit-exactly)
+    VectorizedExecutor  the hot path: the whole cohort's round runs as ONE
+                        compiled ``vmap(local_train)`` + ``lax.scan``
+                        program built from the launch/steps.py builders.
+                        Adapters/opt-states/rank-masks stack along a leading
+                        client axis; heterogeneous per-client step counts
+                        pad to the cohort max with valid-step masking; the
+                        lora_a2 probe epoch runs as a second compiled cohort
+                        program and importance scoring batches through the
+                        rank-importance Pallas kernel
+                        (selection.importance_scores -> kernels/ops.py).
+
+fp32 sync trajectories are bit-identical between the two backends — the
+same gate the multi-process fleet uses (tests/test_executors.py asserts it
+per method; vmap/scan on this backend reproduces the per-client jit loop's
+float arithmetic exactly, which the suite re-verifies on every run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lora, selection
+from repro.launch import steps as steps_mod
+from repro.models import model as M
+from repro.optim import adamw
+from repro.utils import tree_sub
+
+PARITY_A, PARITY_B, PARITY_BOTH = 0, 1, 2
+
+EXECUTORS = ("looped", "vectorized")
+
+
+def adapter_rank(fed) -> int:
+    """The adapter rank r_G the cohort trains at (budget rank elsewhere)."""
+    return fed.global_rank if fed.method == "lora_a2" else fed.rank
+
+
+def adapter_loss_fn(cfg, scale):
+    """Frozen-base LoRA loss (classifier or LM track), shared by the
+    per-batch jit step and the vectorized cohort step."""
+    if cfg.is_encoder:
+        def f(adapters, params, batch):
+            params = jax.tree.map(jax.lax.stop_gradient, params)
+            return M.classifier_loss(cfg, params, adapters, batch,
+                                     lora_scale=scale)
+    else:
+        def f(adapters, params, batch):
+            params = jax.tree.map(jax.lax.stop_gradient, params)
+            return M.lm_loss(cfg, params, adapters, batch, lora_scale=scale,
+                             remat=False)
+    return f
+
+
+def full_ft_loss_fn(cfg):
+    """Loss over all base params (the 'FL (w/o LoRA)' baseline)."""
+    def f(params, batch):
+        if cfg.is_encoder:
+            return M.classifier_loss(cfg, params, None, batch)
+        return M.lm_loss(cfg, params, None, batch, remat=False)
+    return f
+
+
+def score_update(fed, adapters, delta, parity):
+    """Rank scores for the configured criterion.  Broadcasts over any
+    leading client axis on ``delta`` (the vectorized probe output)."""
+    if fed.criterion == "ours":
+        return selection.importance_scores(adapters, delta, parity)
+    if fed.criterion == "magnitude":
+        return selection.magnitude_scores(adapters, delta, parity)
+    if fed.criterion == "importance":
+        return selection.sensitivity_scores(adapters, delta, parity)
+    raise ValueError(fed.criterion)
+
+
+# ---------------------------------------------------------------------------
+# plan stage
+# ---------------------------------------------------------------------------
+
+
+def _batches(rng, n, batch_size):
+    idx = rng.permutation(n)
+    n_batches = max(1, -(-n // batch_size))
+    # np.resize cycles idx, padding the tail batch (works even when the
+    # client's dataset is smaller than half the batch, where a single
+    # concat of idx[:pad] would come up short)
+    return np.resize(idx, n_batches * batch_size).reshape(n_batches,
+                                                          batch_size)
+
+
+def _make_batch(cfg, ds, idx):
+    if cfg.is_encoder:
+        return {"tokens": jnp.asarray(ds.tokens[idx]),
+                "label": jnp.asarray(ds.labels[idx])}
+    return {"tokens": jnp.asarray(ds["tokens"][idx]),
+            "labels": jnp.asarray(ds["labels"][idx])}
+
+
+def _n_examples(ds):
+    # dict shards (LM track) have __len__ == number of *keys*, so they must
+    # be checked first — the engine's old ``len(ds) if hasattr(ds,
+    # '__len__')`` probe silently trained dict shards on 2 examples
+    if isinstance(ds, dict):
+        return len(ds["labels"])
+    return len(ds)
+
+
+@dataclasses.dataclass
+class ClientPlan:
+    """One client's data plan for a round: batch-index rows drawn from the
+    shared rng.  Drawing is the plan stage's job precisely so the compute
+    stage is rng-free and backends can reorder/fuse it freely."""
+    k: int
+    probe_idx: Optional[np.ndarray]   # (Tp, B) rows, lora_a2 only
+    local_idx: np.ndarray             # (T, B) rows
+    n_steps: int                      # probe + local steps (sim-clock units)
+
+
+def plan_client(fed, rng, ds_k, k) -> ClientPlan:
+    """Draw the permutations ``_client_update`` consumes, in its order:
+    probe epochs first (lora_a2), then local epochs."""
+    n_k = _n_examples(ds_k)
+    probe = None
+    if fed.method == "lora_a2":
+        rows = [_batches(rng, n_k, fed.batch_size)
+                for _ in range(fed.probe_epochs)]
+        probe = np.concatenate(rows) if rows else \
+            np.zeros((0, fed.batch_size), np.int64)
+    rows = [_batches(rng, n_k, fed.batch_size)
+            for _ in range(fed.local_epochs)]
+    local = np.concatenate(rows) if rows else \
+        np.zeros((0, fed.batch_size), np.int64)
+    n_probe = 0 if probe is None else len(probe)
+    return ClientPlan(k, probe, local, n_probe + len(local))
+
+
+@dataclasses.dataclass
+class CohortEntry:
+    """One client's slot in a cohort: which decoded broadcast state it
+    trains from, which half moves, and its wire-codec seed."""
+    k: int
+    state: Any
+    parity: int
+    enc_seed: Any
+
+
+@dataclasses.dataclass
+class ClientOut:
+    """Compute-stage output; the payload stage turns it into wire bytes."""
+    final: Any                # trained local tree (adapters, or params)
+    masks: Optional[Any]      # rank masks used (None on the full_ft track)
+    losses: List[float]
+    n_steps: int
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+
+class ClientExecutor:
+    """Compute-stage backend interface.  ``run_cohort`` consumes cohort
+    entries + plans (same launch order the rng was consumed in) and returns
+    one ClientOut per entry; it must not touch the shared rng."""
+
+    name = "?"
+
+    def __init__(self, cfg, fed):
+        self.cfg = cfg
+        self.fed = fed
+
+    def run_cohort(self, ctx, entries, plans) -> List[ClientOut]:
+        raise NotImplementedError
+
+    def run_full_ft(self, start_params, client_ds, plans) -> List[ClientOut]:
+        raise NotImplementedError
+
+
+def run_single_client(ctx, e, plan) -> ClientOut:
+    """The reference compute path for one client: one jit dispatch per
+    batch (``ctx.step``).  This IS the historical ``_client_update`` body;
+    both backends share it — the looped backend for every client, the
+    vectorized backend for singleton groups (a cohort of one has nothing
+    to vectorize, and the per-batch step keeps it bit-exact with the
+    reference by construction)."""
+    fed, cfg = ctx.fed, ctx.cfg
+    ds_k = ctx.client_ds[e.k]
+    local = e.state
+    opt_state = adamw.init_state(local)
+
+    # --- rank selection (lora_a2): probe epoch -> scores -> masks ---
+    if fed.method == "lora_a2":
+        probe, probe_opt = local, opt_state
+        for bidx in plan.probe_idx:
+            probe, probe_opt, _ = ctx.step(ctx.params, probe, probe_opt,
+                                           _make_batch(cfg, ds_k, bidx),
+                                           e.parity, ctx.full_masks)
+        probe_delta = tree_sub(probe, e.state)
+        scores = score_update(fed, e.state, probe_delta, e.parity)
+        masks, _ = selection.select_topk(scores, ctx.client_rank_list[e.k],
+                                         ctx.n_mod)
+        local, opt_state = e.state, adamw.init_state(e.state)
+    elif fed.method == "hetlora":
+        masks = selection.first_k_masks(e.state, ctx.client_rank_list[e.k])
+    else:
+        masks = ctx.full_masks
+
+    # --- local training ---
+    losses = []
+    for bidx in plan.local_idx:
+        local, opt_state, loss = ctx.step(ctx.params, local, opt_state,
+                                          _make_batch(cfg, ds_k, bidx),
+                                          e.parity, masks)
+        losses.append(float(loss))
+    return ClientOut(local, masks, losses, plan.n_steps)
+
+
+def _full_ft_batch_step(cfg, fed):
+    loss_fn = full_ft_loss_fn(cfg)
+    opt_cfg = adamw.AdamWConfig(lr=fed.lr)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt = adamw.apply_update(opt_cfg, params, grads,
+                                                 opt_state)
+        return new_params, new_opt, loss
+
+    return step
+
+
+class LoopedExecutor(ClientExecutor):
+    """Bit-exact reference backend: one jit dispatch per batch per client
+    (the engine's historical per-client loop, verbatim)."""
+
+    name = "looped"
+
+    def __init__(self, cfg, fed):
+        super().__init__(cfg, fed)
+        self._full_step = None
+
+    def run_cohort(self, ctx, entries, plans):
+        return [run_single_client(ctx, e, p)
+                for e, p in zip(entries, plans)]
+
+    def run_full_ft(self, start_params, client_ds, plans):
+        if self._full_step is None:
+            self._full_step = _full_ft_batch_step(self.cfg, self.fed)
+        outs = []
+        for plan in plans:
+            local, opt_state = start_params, adamw.init_state(start_params)
+            losses = []
+            for bidx in plan.local_idx:
+                local, opt_state, loss = self._full_step(
+                    local, opt_state,
+                    _make_batch(self.cfg, client_ds[plan.k], bidx))
+                losses.append(float(loss))
+            outs.append(ClientOut(local, None, losses, plan.n_steps))
+        return outs
+
+
+class VectorizedExecutor(ClientExecutor):
+    """Hot-path backend: the cohort's round is one compiled
+    vmap-over-clients / scan-over-steps program (launch/steps.py builders).
+
+    Stacking layout: every adapter/opt-state/mask leaf gains a leading
+    (K,) client axis; batches are (K, T, batch, ...) with T the cohort max
+    step count and a (K, T) valid mask keeping padded steps a bit-exact
+    no-op.  lora_a2 adds a probe cohort program whose stacked deltas score
+    through the batched rank-importance kernel; top-k selection then runs
+    per client through the same ``selection.select_topk`` the looped
+    backend uses, so masks are bit-identical given bit-identical probes.
+
+    Entries are grouped by (bitwise-identical start state, parity); on the
+    sync path every participant decodes the same broadcast, so a round is
+    one group.  Each group then splits into step-count buckets
+    (``_step_buckets``): clients with similar local step counts share one
+    compiled call, which caps the compute wasted on padded slots at
+    WASTE_CAP while keeping the compiled-shape set small and fixed across
+    rounds.  A step-uniform bucket drops the valid mask entirely (no
+    padded-step carry selects).  Singleton buckets (the async driver and
+    the fleet client launch one client at a time; step-count outliers)
+    degenerate to the per-batch reference step: a cohort of one has
+    nothing to vectorize, and the fused scan program's XLA fusion context
+    can wobble the *reported loss scalar* by 1 ulp for some shapes even
+    when every gradient/update bit matches."""
+
+    name = "vectorized"
+
+    def __init__(self, cfg, fed):
+        super().__init__(cfg, fed)
+        opt_cfg = adamw.AdamWConfig(lr=fed.lr, weight_decay=fed.weight_decay)
+        scale = lora.lora_scale(adapter_rank(fed))
+        self._cohort_step = steps_mod.make_cohort_train_step(
+            adapter_loss_fn(cfg, scale), opt_cfg, lr_b_mult=fed.lr_b_mult)
+        self._full_step = None
+        self._full_single = None
+
+    # -- adapter track ------------------------------------------------------
+
+    def run_cohort(self, ctx, entries, plans):
+        outs = [None] * len(entries)
+        for gidxs in _group_entries(entries):
+            for idxs in _step_buckets(plans, gidxs):
+                if len(idxs) == 1:
+                    # a cohort of one has nothing to vectorize (the async
+                    # driver's and fleet client's case, or a step-count
+                    # outlier) — the per-batch reference step keeps it
+                    # bit-exact with `looped` at zero extra compiles
+                    i = idxs[0]
+                    outs[i] = run_single_client(ctx, entries[i], plans[i])
+                    continue
+                bucket_outs = self._run_bucket(
+                    ctx, [entries[i] for i in idxs],
+                    [plans[i] for i in idxs])
+                for i, out in zip(idxs, bucket_outs):
+                    outs[i] = out
+        return outs
+
+    def _run_bucket(self, ctx, entries, plans):
+        fed, cfg = ctx.fed, ctx.cfg
+        state = entries[0].state
+        parity = entries[0].parity
+        K = len(entries)
+
+        if fed.method == "lora_a2":
+            masks_list = self._probe_and_select(ctx, entries, plans, state,
+                                                parity)
+        elif fed.method == "hetlora":
+            masks_list = [selection.first_k_masks(state,
+                                                  ctx.client_rank_list[e.k])
+                          for e in entries]
+        else:
+            masks_list = [ctx.full_masks] * K
+        masks_K = jax.tree.map(lambda *xs: jnp.stack(xs), *masks_list)
+
+        batch, valid = _stack_batches(
+            cfg, [ctx.client_ds[e.k] for e in entries],
+            [p.local_idx for p in plans])
+        finals, losses = self._cohort_step(ctx.params, state, masks_K, batch,
+                                           valid, parity)
+        losses = np.asarray(losses)
+        outs = []
+        for i, (e, plan) in enumerate(zip(entries, plans)):
+            final_i = jax.tree.map(lambda x: x[i], finals)
+            loss_i = [float(l) for l in losses[i, :len(plan.local_idx)]]
+            outs.append(ClientOut(final_i, masks_list[i], loss_i,
+                                  plan.n_steps))
+        return outs
+
+    def _probe_and_select(self, ctx, entries, plans, state, parity):
+        """lora_a2 stage 1: probe cohort program -> batched scores -> per-
+        client top-k masks."""
+        fed = ctx.fed
+        K = len(entries)
+        probe_T = max(len(p.probe_idx) for p in plans)
+        if probe_T == 0:
+            probe_finals = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (K,) + x.shape), state)
+        else:
+            full_K = jax.tree.map(
+                lambda m: jnp.broadcast_to(m, (K,) + m.shape),
+                ctx.full_masks)
+            pbatch, pvalid = _stack_batches(
+                ctx.cfg, [ctx.client_ds[e.k] for e in entries],
+                [p.probe_idx for p in plans])
+            probe_finals, _ = self._cohort_step(ctx.params, state, full_K,
+                                                pbatch, pvalid, parity)
+        probe_delta = tree_sub(probe_finals, state)   # (K,)-stacked - shared
+        scores = score_update(fed, state, probe_delta, parity)
+        masks_list = []
+        for i, e in enumerate(entries):
+            scores_i = {p: s[i] for p, s in scores.items()}
+            masks, _ = selection.select_topk(scores_i,
+                                             ctx.client_rank_list[e.k],
+                                             ctx.n_mod)
+            masks_list.append(masks)
+        return masks_list
+
+    # -- full_ft track ------------------------------------------------------
+
+    def run_full_ft(self, start_params, client_ds, plans):
+        outs = [None] * len(plans)
+        for idxs in _step_buckets(plans, list(range(len(plans)))):
+            if len(idxs) == 1:  # singleton: degenerate to the reference path
+                if self._full_single is None:
+                    self._full_single = LoopedExecutor(self.cfg, self.fed)
+                outs[idxs[0]] = self._full_single.run_full_ft(
+                    start_params, client_ds, [plans[idxs[0]]])[0]
+                continue
+            if self._full_step is None:
+                self._full_step = steps_mod.make_cohort_full_ft_step(
+                    full_ft_loss_fn(self.cfg),
+                    adamw.AdamWConfig(lr=self.fed.lr))
+            bucket = [plans[i] for i in idxs]
+            batch, valid = _stack_batches(
+                self.cfg, [client_ds[p.k] for p in bucket],
+                [p.local_idx for p in bucket])
+            finals, losses = self._full_step(start_params, batch, valid)
+            losses = np.asarray(losses)
+            for pos, (i, plan) in enumerate(zip(idxs, bucket)):
+                final_i = jax.tree.map(lambda x, p=pos: x[p], finals)
+                loss_i = [float(l)
+                          for l in losses[pos, :len(plan.local_idx)]]
+                outs[i] = ClientOut(final_i, None, loss_i, plan.n_steps)
+        return outs
+
+
+# ---------------------------------------------------------------------------
+# stacking helpers
+# ---------------------------------------------------------------------------
+
+
+WASTE_CAP = 0.125   # max fraction of padded step slots a bucket tolerates
+
+
+def _step_buckets(plans, idxs):
+    """Partition a state-group into step-count buckets: clients sorted by
+    local step count accumulate greedily while the bucket's padded-slot
+    fraction stays under WASTE_CAP.  Keeps one compiled cohort shape per
+    bucket (step counts are fixed across rounds — same shards, same batch
+    size — so every bucket compiles once and is reused every round) while
+    bounding the compute wasted on padded steps.  Any bucket size >= 2 is
+    bit-safe; singletons fall back to the reference path."""
+    # zero-step plans (local_epochs=0) have nothing to stack — they take
+    # the reference path as singletons, which returns the start state
+    buckets = [[i] for i in idxs if len(plans[i].local_idx) == 0]
+    order = sorted((i for i in idxs if len(plans[i].local_idx) > 0),
+                   key=lambda i: len(plans[i].local_idx))
+    if not order:
+        return buckets
+    cur, total = [order[0]], len(plans[order[0]].local_idx)
+    for i in order[1:]:
+        t = len(plans[i].local_idx)   # ascending: t is the candidate max
+        cand_total = total + t
+        waste = ((len(cur) + 1) * t - cand_total) / cand_total
+        if waste <= WASTE_CAP:
+            cur.append(i)
+            total = cand_total
+        else:
+            buckets.append(cur)
+            cur, total = [i], t
+    buckets.append(cur)
+    return buckets
+
+
+def _stack_batches(cfg, datasets, idx_list):
+    """Gather per-client batch-index rows into one (K, T, batch, ...) batch
+    pytree + (K, T) valid mask, padding shorter clients to the cohort max
+    by repeating their first row (computed then discarded).  A step-uniform
+    cohort returns valid=None — the cohort step then skips the padded-step
+    carry selects entirely."""
+    T = max(len(idx) for idx in idx_list)
+    assert T > 0, "cohort with zero local steps"
+    uniform = all(len(idx) == T for idx in idx_list)
+    per_client, valid = [], np.zeros((len(idx_list), T), bool)
+    for i, (ds, idx) in enumerate(zip(datasets, idx_list)):
+        valid[i, :len(idx)] = True
+        if len(idx) < T:
+            idx = np.concatenate([idx, np.repeat(idx[:1], T - len(idx), 0)])
+        per_client.append(_make_batch(cfg, ds, idx))
+    batch = jax.tree.map(lambda *xs: jnp.stack(xs), *per_client)
+    return batch, (None if uniform else jnp.asarray(valid))
+
+
+def _states_identical(a, b) -> bool:
+    """Bitwise pytree equality (object identity fast path — the sync
+    Broadcaster hands every same-version fetcher the same decoded object)."""
+    if a is b:
+        return True
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+               for x, y in zip(la, lb))
+
+
+def _group_entries(entries):
+    """Contiguous runs of entries sharing (bitwise state, parity) — the
+    unit one compiled cohort call covers."""
+    groups, cur = [], [0]
+    for i in range(1, len(entries)):
+        prev, e = entries[cur[0]], entries[i]
+        if e.parity == prev.parity and _states_identical(e.state, prev.state):
+            cur.append(i)
+        else:
+            groups.append(cur)
+            cur = [i]
+    groups.append(cur)
+    return groups
+
+
+def make_executor(name, cfg, fed) -> ClientExecutor:
+    if name == "looped":
+        return LoopedExecutor(cfg, fed)
+    if name == "vectorized":
+        return VectorizedExecutor(cfg, fed)
+    raise ValueError(f"unknown executor {name!r}; want one of {EXECUTORS}")

@@ -12,6 +12,15 @@ Implements the full client/server loop for every method the paper compares:
 The engine is model-agnostic: it drives any ModelConfig whose loss is
 classifier_loss (encoder track) or lm_loss (decoder track).
 
+Client compute routes through a pluggable ``ClientExecutor``
+(core/executors.py, selected by ``FedConfig.executor``): each client round
+decomposes into a host-side *plan* stage (batch permutations drawn from the
+shared rng in launch order), a *compute* stage (the executor backend —
+``looped`` per-batch jit reference, or ``vectorized`` one compiled
+vmap-over-clients/scan-over-steps cohort program), and a *payload* stage
+(per-client upload extraction).  fp32 sync trajectories are bit-identical
+across backends (tests/test_executors.py).
+
 Every client→server and server→client exchange goes through repro.comm:
 uploads run the clip → quantize → privatize → encode pipeline
 (comm/pipeline.py — DP noise is discrete on the int8 grid, drawn *after*
@@ -33,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -46,10 +55,17 @@ from repro.comm import transport as xport
 from repro.comm.server import Broadcaster, BuffServer, ClientUpdate, \
     SyncServer
 from repro.configs.base import ModelConfig
-from repro.core import aggregate, lora, selection
+from repro.core import aggregate, executors, lora, selection
+from repro.core.executors import PARITY_A, PARITY_B, PARITY_BOTH, \
+    adapter_rank
 from repro.models import model as M
 from repro.optim import adamw
 from repro.utils import tree_sub
+
+# plan-stage helpers shared with the executors (kept importable from here —
+# launch/fleet.py and the tests address them through federation)
+_batches = executors._batches
+_make_batch = executors._make_batch
 
 
 @dataclasses.dataclass
@@ -75,6 +91,8 @@ class FedConfig:
     eval_every: int = 5
     track_similarity: bool = False
     hetlora_gamma: float = 0.99
+    # --- cohort execution engine (core/executors.py) ---
+    executor: str = "looped"      # 'looped' (reference) | 'vectorized'
     # --- communication subsystem (repro.comm) ---
     codec: str = "fp32"           # uplink element codec: fp32 | bf16 | int8
     downlink_codec: str = "fp32"  # server→client: fp32 | bf16 | delta
@@ -83,33 +101,20 @@ class FedConfig:
     staleness_alpha: float = 0.5  # async: staleness discount exponent
     server_lr: float = 1.0        # async: server step size on the buffer sum
     network: Optional[object] = None   # SimulatedNetwork or comm.transport.Transport
-    step_time_s: float = 0.01     # simulated seconds per local step (the
-    #                               single source of truth — the transport
-    #                               has no default of its own)
-
-
-PARITY_A, PARITY_B, PARITY_BOTH = 0, 1, 2
-
-
-def adapter_rank(fed: FedConfig) -> int:
-    return fed.global_rank if fed.method == "lora_a2" else fed.rank
+    step_time_s: Union[float, str] = 0.01
+    # simulated seconds per local step — the single source of truth (the
+    # transport has no default of its own).  "auto" derives it per arch
+    # from the analytic roofline model (launch/roofline.step_time_estimate)
+    # so simulated time tracks the executor's actual per-step cost.
 
 
 def _loss_fn(cfg: ModelConfig, scale):
-    if cfg.is_encoder:
-        def f(adapters, params, batch):
-            params = jax.tree.map(jax.lax.stop_gradient, params)  # frozen base
-            return M.classifier_loss(cfg, params, adapters, batch, lora_scale=scale)
-    else:
-        def f(adapters, params, batch):
-            params = jax.tree.map(jax.lax.stop_gradient, params)
-            return M.lm_loss(cfg, params, adapters, batch, lora_scale=scale,
-                             remat=False)
-    return f
+    return executors.adapter_loss_fn(cfg, scale)
 
 
 def make_local_step(cfg: ModelConfig, fed: FedConfig, opt_cfg):
-    """jit-compiled one-batch local step shared by all clients."""
+    """jit-compiled one-batch local step shared by all clients (the looped
+    backend's unit of dispatch)."""
     scale = lora.lora_scale(adapter_rank(fed))
     loss_fn = _loss_fn(cfg, scale)
 
@@ -126,67 +131,39 @@ def make_local_step(cfg: ModelConfig, fed: FedConfig, opt_cfg):
     return step
 
 
-def make_full_ft_step(cfg: ModelConfig, opt_cfg):
-    def loss_fn(params, batch):
-        if cfg.is_encoder:
-            return M.classifier_loss(cfg, params, None, batch)
-        return M.lm_loss(cfg, params, None, batch, remat=False)
-
-    @jax.jit
-    def step(params, opt_state, batch):
-        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-        new_params, new_opt = adamw.apply_update(opt_cfg, params, grads, opt_state)
-        return new_params, new_opt, loss
-
-    return step
-
-
-def _batches(rng, n, batch_size):
-    idx = rng.permutation(n)
-    n_batches = max(1, -(-n // batch_size))
-    # np.resize cycles idx, padding the tail batch (works even when the
-    # client's dataset is smaller than half the batch, where a single
-    # concat of idx[:pad] would come up short)
-    return np.resize(idx, n_batches * batch_size).reshape(n_batches,
-                                                          batch_size)
-
-
-def _make_batch(cfg, ds, idx):
-    if cfg.is_encoder:
-        return {"tokens": jnp.asarray(ds.tokens[idx]),
-                "label": jnp.asarray(ds.labels[idx])}
-    return {"tokens": jnp.asarray(ds["tokens"][idx]),
-            "labels": jnp.asarray(ds["labels"][idx])}
-
-
 def make_eval(cfg: ModelConfig, scale):
+    """Batched accuracy eval.  The tail batch pads to the full batch size
+    with a validity mask, so *every* call — remainder included — runs the
+    one compiled eval function (the old remainder path fell off jit and
+    paid eager dispatch on every evaluation)."""
     @jax.jit
-    def eval_batch(params, adapters, tokens, labels):
+    def eval_batch(params, adapters, tokens, labels, valid):
         logits = M.classify(cfg, params, adapters, tokens, lora_scale=scale)
-        return (jnp.argmax(logits, -1) == labels).sum()
+        return ((jnp.argmax(logits, -1) == labels) & valid).sum()
 
     def evaluate(params, adapters, test_ds, batch=256):
         n = len(test_ds)
         correct = 0
         for s in range(0, n, batch):
             idx = np.arange(s, min(s + batch, n))
-            if len(idx) < batch:  # remainder: eval unjitted (runs once)
-                logits = M.classify(cfg, params, adapters,
-                                    jnp.asarray(test_ds.tokens[idx]),
-                                    lora_scale=scale)
-                correct += int((jnp.argmax(logits, -1) ==
-                                jnp.asarray(test_ds.labels[idx])).sum())
-            else:
-                correct += int(eval_batch(params, adapters,
-                                          jnp.asarray(test_ds.tokens[idx]),
-                                          jnp.asarray(test_ds.labels[idx])))
+            tok = np.asarray(test_ds.tokens[idx])
+            lab = np.asarray(test_ds.labels[idx])
+            valid = np.ones(batch, bool)
+            if len(idx) < batch:       # pad the tail; padded rows are masked
+                pad = batch - len(idx)
+                tok = np.concatenate([tok, np.repeat(tok[:1], pad, 0)])
+                lab = np.concatenate([lab, np.repeat(lab[:1], pad, 0)])
+                valid[len(idx):] = False
+            correct += int(eval_batch(params, adapters, jnp.asarray(tok),
+                                      jnp.asarray(lab), jnp.asarray(valid)))
         return correct / n
 
     return evaluate
 
 
 # ---------------------------------------------------------------------------
-# engine context + the client-work function shared by sync and async servers
+# engine context + the plan/compute/payload client stages shared by the
+# sync and async servers (compute dispatches to ctx.executor)
 # ---------------------------------------------------------------------------
 
 
@@ -215,6 +192,7 @@ class _Ctx:
     rng: np.random.Generator
     net: object               # comm.transport.Transport
     kd: jax.Array
+    executor: executors.ClientExecutor = None
 
 
 def _round_parity(fed, t):
@@ -234,49 +212,26 @@ def _enc_seed(fed, t, k):
     return [fed.seed, t, k]
 
 
-def _client_update(ctx: _Ctx, global_adapters, k, parity, enc_seed):
-    """One client's local round starting from the decoded broadcast state.
-    Returns the wire payload (masked delta through the configured codec)."""
-    fed, cfg = ctx.fed, ctx.cfg
-    ds_k = ctx.client_ds[k]
-    n_k = len(ds_k) if hasattr(ds_k, "__len__") else len(ds_k["labels"])
-    local = global_adapters
-    opt_state = adamw.init_state(local)
-    n_steps = 0
+def _run_cohort(ctx: _Ctx, entries):
+    """Plan → compute → payload for one cohort of clients (launch order).
 
-    # --- rank selection (lora_a2): probe epoch -> scores -> masks ---
-    if fed.method == "lora_a2":
-        probe, probe_opt = local, opt_state
-        for _ in range(fed.probe_epochs):
-            for bidx in _batches(ctx.rng, n_k, fed.batch_size):
-                probe, probe_opt, _ = ctx.step(ctx.params, probe, probe_opt,
-                                               _make_batch(cfg, ds_k, bidx),
-                                               parity, ctx.full_masks)
-                n_steps += 1
-        probe_delta = tree_sub(probe, global_adapters)
-        scores = _score(fed, global_adapters, probe_delta, parity)
-        masks, _ = selection.select_topk(scores, ctx.client_rank_list[k],
-                                         ctx.n_mod)
-        local, opt_state = global_adapters, adamw.init_state(global_adapters)
-    elif fed.method == "hetlora":
-        masks = selection.first_k_masks(global_adapters,
-                                        ctx.client_rank_list[k])
-    else:
-        masks = ctx.full_masks
+    The plan stage consumes the shared rng exactly as the historical
+    per-client loop did; the compute stage is rng-free and backend-chosen;
+    the payload stage consumes the DP key stream in launch order and routes
+    every upload through the unchanged clip→quantize→privatize→encode
+    pipeline."""
+    plans = [executors.plan_client(ctx.fed, ctx.rng, ctx.client_ds[e.k], e.k)
+             for e in entries]
+    outs = ctx.executor.run_cohort(ctx, entries, plans)
+    return [_client_payload(ctx, e, out) for e, out in zip(entries, outs)]
 
-    # --- local training ---
-    losses = []
-    for _ in range(fed.local_epochs):
-        for bidx in _batches(ctx.rng, n_k, fed.batch_size):
-            local, opt_state, loss = ctx.step(ctx.params, local, opt_state,
-                                              _make_batch(cfg, ds_k, bidx),
-                                              parity, masks)
-            losses.append(float(loss))
-            n_steps += 1
 
-    delta = tree_sub(local, global_adapters)
-    masked = selection.mask_delta(delta, masks, parity) \
-        if parity != PARITY_BOTH else delta
+def _client_payload(ctx: _Ctx, e, out) -> _ClientResult:
+    """Payload stage: masked delta through the configured wire pipeline."""
+    fed = ctx.fed
+    delta = tree_sub(out.final, e.state)
+    masked = selection.mask_delta(delta, out.masks, e.parity) \
+        if e.parity != PARITY_BOTH else delta
 
     dp_spec, kn = None, None
     if fed.dp_epsilon is not None:
@@ -286,15 +241,23 @@ def _client_update(ctx: _Ctx, global_adapters, k, parity, enc_seed):
     # clip → quantize → privatize → encode: under codec='int8' the DP noise
     # is discrete on the quantization grid (comm/pipeline.py), so the codec
     # never re-rounds the calibrated distribution
-    payload = pipeline.encode_upload(masked, masks, parity, codec=fed.codec,
-                                     seed=enc_seed, dp=dp_spec, key=kn)
+    payload = pipeline.encode_upload(masked, out.masks, e.parity,
+                                     codec=fed.codec, seed=e.enc_seed,
+                                     dp=dp_spec, key=kn)
     if fed.codec == "fp32":
         # measured wire bytes must agree with the analytic closed form
         stats = codec.payload_stats(payload)
-        want = int(4 * _upload_count(global_adapters, masks, parity))
+        want = int(4 * _upload_count(e.state, out.masks, e.parity))
         assert stats.data_bytes == want, \
             f"measured {stats.data_bytes}B != analytic {want}B"
-    return _ClientResult(k, payload, masks, losses, n_steps)
+    return _ClientResult(e.k, payload, out.masks, out.losses, out.n_steps)
+
+
+def _client_update(ctx: _Ctx, global_adapters, k, parity, enc_seed):
+    """One client's local round starting from the decoded broadcast state
+    (a cohort of one — the async driver's and the fleet client's unit)."""
+    entry = executors.CohortEntry(k, global_adapters, parity, enc_seed)
+    return _run_cohort(ctx, [entry])[0]
 
 
 def _shard_clients(train_ds, client_indices):
@@ -305,6 +268,20 @@ def _shard_clients(train_ds, client_indices):
                  else {k: v[i] for k, v in train_ds.items()}
                  for i in client_indices]
     return weights, client_ds
+
+
+def resolve_step_time(fed: FedConfig, cfg: ModelConfig, train_ds) -> FedConfig:
+    """Materialize ``step_time_s="auto"`` into seconds-per-step from the
+    analytic roofline model (launch/roofline.py) for this arch and the
+    session's (batch, seq) shape.  Returns fed unchanged otherwise."""
+    if fed.step_time_s != "auto":
+        return fed
+    from repro.launch.roofline import step_time_estimate
+    tokens = train_ds.tokens if hasattr(train_ds, "tokens") \
+        else train_ds["tokens"]
+    seq_len = int(np.asarray(tokens).shape[-1])
+    t = step_time_estimate(cfg, batch_size=fed.batch_size, seq_len=seq_len)
+    return dataclasses.replace(fed, step_time_s=float(t))
 
 
 def build_session(cfg: ModelConfig, fed: FedConfig, train_ds, client_indices,
@@ -318,6 +295,7 @@ def build_session(cfg: ModelConfig, fed: FedConfig, train_ds, client_indices,
     if fed.method == "full_ft":
         raise ValueError("full_ft has no adapter session; run_federated "
                          "handles it on a separate path")
+    fed = resolve_step_time(fed, cfg, train_ds)
     key = jax.random.PRNGKey(fed.seed)
     kp, ka, kd = jax.random.split(key, 3)
     params = M.init_params(cfg, kp)
@@ -333,7 +311,8 @@ def build_session(cfg: ModelConfig, fed: FedConfig, train_ds, client_indices,
                                  else [fed.rank] * fed.n_clients),
                n_mod=lora.n_modules(cfg),
                full_masks=selection.masks_like(adapters), rng=rng,
-               net=transport, kd=kd)
+               net=transport, kd=kd,
+               executor=executors.make_executor(fed.executor, cfg, fed))
     return ctx, adapters
 
 
@@ -344,8 +323,7 @@ def skip_client_rng(ctx: _Ctx, k):
     its own batch permutations land at the same stream positions as in the
     in-process engine."""
     fed = ctx.fed
-    ds_k = ctx.client_ds[k]
-    n_k = len(ds_k) if hasattr(ds_k, "__len__") else len(ds_k["labels"])
+    n_k = executors._n_examples(ctx.client_ds[k])
     probe = fed.probe_epochs if fed.method == "lora_a2" else 0
     for _ in range(probe + fed.local_epochs):
         ctx.rng.permutation(n_k)          # one draw per _batches() call
@@ -359,6 +337,7 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, train_ds, test_ds,
     history = {"round": [], "acc": [], "loss": [], "uploaded": [],
                "downloaded": [], "uploaded_cum": 0.0, "downloaded_cum": 0.0,
                "sim_time": [], "mask_overlap": [], "update_cosine": []}
+    fed = resolve_step_time(fed, cfg, train_ds)
     network = fed.network if fed.network is not None \
         else net.ideal_network(fed.n_clients)
     # every exchange below goes through the Transport interface; wrapping a
@@ -372,8 +351,9 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, train_ds, test_ds,
         params = M.init_params(cfg, kp)
         rng = np.random.default_rng(fed.seed)
         weights, client_ds = _shard_clients(train_ds, client_indices)
+        executor = executors.make_executor(fed.executor, cfg, fed)
         return _run_full_ft(cfg, fed, params, client_ds, weights, test_ds,
-                            history, rng, transport)
+                            history, rng, transport, executor)
 
     ctx, adapters = build_session(cfg, fed, train_ds, client_indices,
                                   transport)
@@ -391,7 +371,13 @@ def run_federated(cfg: ModelConfig, fed: FedConfig, train_ds, test_ds,
 
 
 def _run_sync(ctx: _Ctx, adapters, history, test_ds, evaluate):
-    """One aggregation per round; round time = slowest participant."""
+    """One aggregation per round; round time = slowest participant.
+
+    The round's broadcasts all happen up front (downlinks never consume the
+    drop rng), the whole cohort then computes through ctx.executor — one
+    compiled step on the vectorized backend — and the uplinks fire in
+    launch order, so the shared rng/clock streams are identical to the
+    historical per-client interleaving."""
     fed = ctx.fed
     server = SyncServer(fed.method, adapters, r_G=adapter_rank(fed),
                         client_rank_list=ctx.client_rank_list,
@@ -404,22 +390,28 @@ def _run_sync(ctx: _Ctx, adapters, history, test_ds, evaluate):
         participants = _sample_participants(ctx.rng, fed)
         ref_adapters = server.adapters  # pre-aggregation global (tracking)
 
-        updates, results, arrivals = [], [], []
+        entries, down_arrs = [], []
         for k in participants:
             bcast, global_at_client = bcaster.payload_for(
                 k, server.adapters, server.version)
             down = ctx.net.downlink(k, bcast, now=clock.now)
             history["downloaded_cum"] += len(bcast)
-            res = _client_update(ctx, global_at_client, k, parity,
-                                 _enc_seed(fed, t, k))
-            t_done = down.arrived_at + \
-                ctx.net.compute_time(k, res.n_steps, fed.step_time_s)
-            up = ctx.net.uplink(k, res.payload, now=t_done)
+            entries.append(executors.CohortEntry(
+                k, global_at_client, parity, _enc_seed(fed, t, k)))
+            down_arrs.append(down.arrived_at)
+
+        results = _run_cohort(ctx, entries)
+
+        updates, arrivals = [], []
+        for res, d_arr in zip(results, down_arrs):
+            t_done = d_arr + ctx.net.compute_time(res.client_id, res.n_steps,
+                                                  fed.step_time_s)
+            up = ctx.net.uplink(res.client_id, res.payload, now=t_done)
             history["uploaded_cum"] += len(res.payload)
-            results.append(res)
             arrivals.append(up.arrived_at if not up.dropped else t_done)
             if not up.dropped:
-                updates.append(ClientUpdate(k, res.payload, ctx.weights[k],
+                updates.append(ClientUpdate(res.client_id, res.payload,
+                                            ctx.weights[res.client_id],
                                             server.version, parity,
                                             sent_at=t_done,
                                             arrived_at=up.arrived_at))
@@ -447,7 +439,9 @@ def _run_sync(ctx: _Ctx, adapters, history, test_ds, evaluate):
 def _run_async(ctx: _Ctx, adapters, history, test_ds, evaluate):
     """Event-driven FedBuff loop: a persistent cohort of clients trains
     continuously; the server aggregates every buffer_size arrivals.  One
-    'round' in history = one global version (buffer flush)."""
+    'round' in history = one global version (buffer flush).  Each launch is
+    a cohort of one through ctx.executor (clients start from different
+    global versions, so there is no shared start state to batch)."""
     fed = ctx.fed
     participants = _sample_participants(ctx.rng, fed)
     K = fed.buffer_size or max(1, len(participants) // 2)
@@ -523,10 +517,11 @@ def _run_async(ctx: _Ctx, adapters, history, test_ds, evaluate):
 
 
 def _run_full_ft(cfg, fed, params, client_ds, weights, test_ds, history, rng,
-                 transport):
-    """FedAvg on all base params; uploads travel as dense pytree payloads."""
-    opt_cfg = adamw.AdamWConfig(lr=fed.lr)
-    step = make_full_ft_step(cfg, opt_cfg)
+                 transport, executor):
+    """FedAvg on all base params; uploads travel as dense pytree payloads.
+    Compute routes through the same executor backends as the adapter track
+    (the vectorized cohort step has a full-params twin in launch/steps.py).
+    """
     evaluate = make_eval(cfg, 1.0) if cfg.is_encoder else None
     clock = net.RoundClock()
     # full FT trains every base parameter, so a slot-delta downlink would be
@@ -539,31 +534,28 @@ def _run_full_ft(cfg, fed, params, client_ds, weights, test_ds, history, rng,
         # server's params bit-exactly; bf16 is a lossy downlink)
         client_params = params if dl_codec == "fp32" \
             else codec.decode_dense(bcast)
-        deltas, survivors, losses, arrivals = [], [], [], []
+        plans, down_arrs = [], []
         for k in participants:
             down = transport.downlink(k, bcast, now=clock.now)
             history["downloaded_cum"] += len(bcast)
-            local, opt_state = client_params, adamw.init_state(client_params)
-            ds_k = client_ds[k]
-            n_k = len(ds_k) if hasattr(ds_k, "__len__") else len(ds_k["labels"])
-            n_steps = 0
-            for _ in range(fed.local_epochs):
-                for bidx in _batches(rng, n_k, fed.batch_size):
-                    local, opt_state, loss = step(local, opt_state,
-                                                  _make_batch(cfg, ds_k, bidx))
-                    losses.append(float(loss))
-                    n_steps += 1
-            payload = codec.encode_dense(tree_sub(local, client_params),
+            down_arrs.append(down.arrived_at)
+            plans.append(executors.plan_client(fed, rng, client_ds[k], k))
+        outs = executor.run_full_ft(client_params, client_ds, plans)
+
+        deltas, survivors, losses, arrivals = [], [], [], []
+        for plan, out, d_arr in zip(plans, outs, down_arrs):
+            losses.extend(out.losses)
+            payload = codec.encode_dense(tree_sub(out.final, client_params),
                                          codec=fed.codec,
-                                         seed=_enc_seed(fed, t, k))
-            t_done = down.arrived_at + \
-                transport.compute_time(k, n_steps, fed.step_time_s)
-            up = transport.uplink(k, payload, now=t_done)
+                                         seed=_enc_seed(fed, t, plan.k))
+            t_done = d_arr + \
+                transport.compute_time(plan.k, out.n_steps, fed.step_time_s)
+            up = transport.uplink(plan.k, payload, now=t_done)
             history["uploaded_cum"] += len(payload)
             arrivals.append(up.arrived_at if not up.dropped else t_done)
             if not up.dropped:
                 deltas.append(codec.decode_dense(payload))
-                survivors.append(k)
+                survivors.append(plan.k)
         if deltas:
             w = [weights[k] for k in survivors]
             w = [x / sum(w) for x in w]
@@ -586,16 +578,6 @@ def _sample_participants(rng, fed):
         return list(range(fed.n_clients))
     m = max(1, int(round(fed.participation * fed.n_clients)))
     return sorted(rng.choice(fed.n_clients, size=m, replace=False).tolist())
-
-
-def _score(fed, adapters, probe_delta, parity):
-    if fed.criterion == "ours":
-        return selection.importance_scores(adapters, probe_delta, parity)
-    if fed.criterion == "magnitude":
-        return selection.magnitude_scores(adapters, probe_delta, parity)
-    if fed.criterion == "importance":
-        return selection.sensitivity_scores(adapters, probe_delta, parity)
-    raise ValueError(fed.criterion)
 
 
 def _upload_count(adapters, masks, parity):

@@ -20,25 +20,34 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lora import iter_modules
+from repro.kernels import ops
 
 
 def importance_scores(adapters, delta, parity):
     """{path: scores} with scores shaped (..., r) (period-stacked when the
-    module is; the leading dims broadcast through).
+    module is; the leading dims broadcast through — including a stacked
+    client axis on the delta side only, as the vectorized executor passes).
 
     parity 1 (odd, B='b' trained): S = ||a[:,i]|| * ||Δb[i,:]||
     parity 0 (even, A='a' trained): S = ||Δa[:,i]|| * ||b[i,:]||
+
+    Computed by the batched rank-importance Pallas kernel (kernels/ops.py):
+    every (module, period[, client]) instance is one row of the kernel's
+    batch axis, so the whole cohort scores in a handful of kernel calls.
     """
     scores = {}
     for path, ab in iter_modules(adapters):
         d = _get(delta, path)
         if parity == 1:
-            u = jnp.linalg.norm(ab["a"].astype(jnp.float32), axis=-2)   # (..., r)
-            v = jnp.linalg.norm(d["b"].astype(jnp.float32), axis=-1)    # (..., r)
+            x, y = ab["a"], d["b"]
         else:
-            u = jnp.linalg.norm(d["a"].astype(jnp.float32), axis=-2)
-            v = jnp.linalg.norm(ab["b"].astype(jnp.float32), axis=-1)
-        scores[path] = u * v
+            x, y = d["a"], ab["b"]
+        x = x.astype(jnp.float32)
+        y = y.astype(jnp.float32)
+        lead = jnp.broadcast_shapes(x.shape[:-2], y.shape[:-2])
+        x = jnp.broadcast_to(x, lead + x.shape[-2:])
+        y = jnp.broadcast_to(y, lead + y.shape[-2:])
+        scores[path] = ops.rank_importance(x, y)
     return scores
 
 

@@ -1,0 +1,47 @@
+"""Version/backend compatibility shims shared by the Pallas kernels.
+
+Two concerns live here so the kernel modules stay pure kernel code:
+
+* ``tpu_compiler_params`` — the TPU compiler-options dataclass was renamed
+  ``TPUCompilerParams`` -> ``CompilerParams`` across jax releases; resolve
+  whichever this jax ships (the old name raised AttributeError at *call*
+  time, which is how the whole kernel layer silently rotted on this
+  container's jax).
+* ``default_interpret`` — kernels compile for real only when a TPU backend
+  is actually present; everywhere else (this CPU container, GPU hosts) the
+  Pallas interpreter executes the kernel body as jax ops.  The env knobs
+  override detection in both directions: ``REPRO_PALLAS_COMPILE=1`` forces
+  compilation, ``REPRO_PALLAS_INTERPRET=1`` forces the interpreter (useful
+  for debugging a miscompile on TPU).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct the TPU compiler-params object under either jax naming."""
+    return _CompilerParams(**kwargs)
+
+
+def tpu_backend_present() -> bool:
+    """True when jax's default backend is a real TPU."""
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:  # pragma: no cover - no backend at all
+        return False
+
+
+def default_interpret() -> bool:
+    """Interpret unless a TPU is present (or the env says otherwise)."""
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1":
+        return True
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return False
+    return not tpu_backend_present()

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import default_interpret, tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -63,10 +65,13 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 def decode_attention(q, k_cache, v_cache, pos, *, window=None, ring=False,
-                     block_s=512, interpret=True):
+                     block_s=512, interpret=None):
     """q: (B, Hq, D); k/v_cache: (B, S, Hkv, D); pos: () int32.
 
-    Returns (B, Hq, D).  S must be divisible by block_s (ops.py pads)."""
+    Returns (B, Hq, D).  S must be divisible by block_s (ops.py pads).
+    interpret=None resolves per backend (compat.default_interpret)."""
+    if interpret is None:
+        interpret = default_interpret()
     B, Hq, D = q.shape
     S, Hkv = k_cache.shape[1], k_cache.shape[2]
     G = Hq // Hkv
@@ -93,7 +98,7 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, ring=False,
             pltpu.VMEM((G, 1), jnp.float32),   # running sum
             pltpu.VMEM((G, D), jnp.float32),   # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(pos_arr, qg, k_cache, v_cache)

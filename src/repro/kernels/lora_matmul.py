@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import default_interpret, tpu_compiler_params
+
 
 def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, xa_ref, *, scale,
             out_dtype):
@@ -44,11 +46,14 @@ def _kernel(x_ref, w_ref, a_ref, b_ref, o_ref, acc_ref, xa_ref, *, scale,
 
 
 def lora_matmul(x, w, a, b, *, scale=1.0, block_m=256, block_n=256,
-                block_k=512, interpret=True):
+                block_k=512, interpret=None):
     """x: (M, K); w: (K, N); a: (K, r); b: (r, N) -> (M, N).
 
     M, N, K must be divisible by the block sizes (ops.py pads).
+    interpret=None resolves per backend (compat.default_interpret).
     """
+    if interpret is None:
+        interpret = default_interpret()
     M, K = x.shape
     _, N = w.shape
     r = a.shape[1]
@@ -71,7 +76,7 @@ def lora_matmul(x, w, a, b, *, scale=1.0, block_m=256, block_n=256,
             pltpu.VMEM((bm, bn), jnp.float32),  # base accumulator
             pltpu.VMEM((bm, r), jnp.float32),   # low-rank partial (x @ A)
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w, a, b)

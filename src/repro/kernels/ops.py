@@ -1,14 +1,16 @@
 """jit'd public wrappers for the Pallas kernels: padding to tile-aligned
 shapes, dtype handling, and the interpret/compile switch.
 
-On this CPU-only container kernels always run in interpret mode (the kernel
-body executes as jax ops); on a real TPU host set ``interpret=False`` (or
-env REPRO_PALLAS_COMPILE=1) to compile them.
+Dispatch is backend-aware (kernels/compat.py): on a real TPU host the
+kernels compile via Mosaic; everywhere else (this CPU container, GPU) the
+Pallas interpreter executes the kernel body as jax ops.  Env overrides:
+``REPRO_PALLAS_COMPILE=1`` forces compilation, ``REPRO_PALLAS_INTERPRET=1``
+forces the interpreter.  Correctness parity against the pure-jnp oracles in
+kernels/ref.py is asserted by tests/test_kernels.py in whichever mode runs.
 """
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
@@ -16,9 +18,8 @@ import jax.numpy as jnp
 from repro.kernels import decode_attention as _da
 from repro.kernels import lora_matmul as _lm
 from repro.kernels import rank_importance as _ri
+from repro.kernels.compat import default_interpret
 from repro.utils import round_up
-
-INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
 
 def _pad_axis(x, size, axis):
@@ -52,7 +53,7 @@ def lora_matmul(x, w, a, b, *, scale=1.0, block_m=256, block_n=256,
     ap = _pad_axis(_pad_axis(a, Kp, 0), rp, 1)
     bp = _pad_axis(_pad_axis(b, rp, 0), Np, 1)
     y = _lm.lora_matmul(xp, wp, ap, bp, scale=scale, block_m=bm, block_n=bn,
-                        block_k=bk, interpret=INTERPRET)
+                        block_k=bk, interpret=default_interpret())
     return y[:M, :N].reshape(lead + (N,))
 
 
@@ -74,7 +75,7 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, ring=False,
         k_cache = _pad_axis(k_cache, Sp, 1)
         v_cache = _pad_axis(v_cache, Sp, 1)
     out = _da.decode_attention(q, k_cache, v_cache, pos, window=window,
-                               ring=ring, block_s=bs, interpret=INTERPRET)
+                               ring=ring, block_s=bs, interpret=default_interpret())
     return out[:, None] if squeeze else out
 
 
@@ -82,7 +83,9 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, ring=False,
 def rank_importance(a, db, *, block_k=1024):
     """a: (..., d_in, r); db: (..., r, d_out) -> (..., r).
 
-    Zero-pads the reduction dims (zeros don't change sums of squares)."""
+    Any number of leading dims (period stacking, a vmapped client axis, or
+    both) flattens to one kernel batch axis.  Zero-pads the reduction dims
+    (zeros don't change sums of squares)."""
     def one(aa, bb):
         d_in, r = aa.shape
         d_out = bb.shape[1]
@@ -90,8 +93,12 @@ def rank_importance(a, db, *, block_k=1024):
         bkb = min(block_k, round_up(d_out, 128))
         aa = _pad_axis(aa, round_up(d_in, bka), 0)
         bb = _pad_axis(bb, round_up(d_out, bkb), 1)
-        return _ri.rank_importance(aa, bb, block_k=block_k, interpret=INTERPRET)
+        return _ri.rank_importance(aa, bb, block_k=block_k,
+                                   interpret=default_interpret())
 
     if a.ndim == 2:
         return one(a, db)
-    return jax.vmap(one)(a, db)
+    lead = a.shape[:-2]
+    flat = jax.vmap(one)(a.reshape((-1,) + a.shape[-2:]),
+                         db.reshape((-1,) + db.shape[-2:]))
+    return flat.reshape(lead + flat.shape[-1:])

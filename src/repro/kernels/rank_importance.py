@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import default_interpret, tpu_compiler_params
 from repro.utils import cdiv
 
 
@@ -44,8 +45,13 @@ def _kernel(a_ref, b_ref, o_ref, sa_ref, sb_ref, *, na, nb):
         o_ref[...] = jnp.sqrt(sa_ref[...]) * jnp.sqrt(sb_ref[...])
 
 
-def rank_importance(a, db, *, block_k=1024, interpret=True):
-    """a: (d_in, r); db: (r, d_out) -> (r,) importance scores."""
+def rank_importance(a, db, *, block_k=1024, interpret=None):
+    """a: (d_in, r); db: (r, d_out) -> (r,) importance scores.
+
+    interpret=None resolves per backend: compiled on TPU, interpreted
+    elsewhere (compat.default_interpret)."""
+    if interpret is None:
+        interpret = default_interpret()
     d_in, r = a.shape
     _, d_out = db.shape
     bka = min(block_k, d_in)
@@ -73,7 +79,7 @@ def rank_importance(a, db, *, block_k=1024, interpret=True):
             pltpu.VMEM((1, r), jnp.float32),
             pltpu.VMEM((1, r), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(a, db)

@@ -32,6 +32,12 @@ A client that disconnects mid-round is dropped and the round proceeds
 with the survivors — the socket twin of ``LinkModel.drop_prob`` — and all
 socket waits honor a timeout, so a hung peer raises instead of wedging
 the run.
+
+Client compute routes through the same ``FedConfig.executor`` backends as
+the in-process engine (core/executors.py): each fleet client trains its
+own shard as a cohort of one, which both backends execute on the
+bit-exact per-batch reference path, so the parity guarantee holds under
+either executor setting.
 """
 from __future__ import annotations
 

@@ -36,8 +36,10 @@ CHIPS = 256  # single-pod roofline (spec: roofline table is single-pod only)
 
 def params_active(arch):
     from repro.configs.base import get_config
-    from repro.core import lora
-    cfg = get_config(arch)
+    return params_active_cfg(get_config(arch))
+
+
+def params_active_cfg(cfg):
     d, f, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab_size
     hd, Hq, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
     total = active = V * d  # embed (lm head tied -> count once for matmul)
@@ -63,6 +65,25 @@ def params_active(arch):
         total += per * mult
         active += per * mult
     return total, active
+
+
+def step_time_estimate(cfg, *, batch_size: int, seq_len: int) -> float:
+    """Analytic seconds per local training step on ONE chip for this arch
+    at (batch_size, seq_len) — the ``FedConfig.step_time_s="auto"``
+    calibration (clients train on a single device; the federated axis is
+    across clients, not chips).
+
+    Roofline max of the two per-step bounds:
+        compute  6 * N_active * tokens / PEAK_FLOPS     (fwd 2ND + bwd 4ND)
+        memory   3 * 2B * N_active / HBM_BW             (fwd+bwd+update
+                                                         stream the resident
+                                                         bf16 weights ~3x)
+    """
+    _, n_active = params_active_cfg(cfg)
+    tokens = batch_size * seq_len
+    t_compute = 6.0 * n_active * tokens / PEAK_FLOPS
+    t_memory = 3.0 * 2.0 * n_active / HBM_BW
+    return max(t_compute, t_memory)
 
 
 def model_flops_per_device(arch, shape_name, meta):

@@ -40,6 +40,133 @@ from repro.utils import tree_add, tree_sub
 # ---------------------------------------------------------------------------
 # Federated train step
 # ---------------------------------------------------------------------------
+#
+# The inner loop is shared machinery: ``make_local_train`` builds one
+# client's local-epoch scan, ``make_cohort_*`` vmap it over a stacked client
+# axis with padded-step masking (heterogeneous per-client dataset sizes) and
+# heterogeneous rank-mask support.  ``make_federated_train_step`` composes
+# the same inner loop with in-program aggregation for the production pjit
+# path; ``core/executors.VectorizedExecutor`` composes it with per-client
+# upload extraction so payloads still travel the comm pipeline unchanged.
+
+
+def _scan_steps(step_fn, carry0, batch_k, valid_k=None):
+    """lax.scan ``step_fn`` over the step axis of ``batch_k``.
+
+    valid_k (bool (T,), optional) marks padded steps: an invalid step keeps
+    the carry bit-exactly (the padded batch still computes, its result is
+    discarded), which is what lets clients with different local step counts
+    share one compiled cohort program without perturbing valid steps."""
+    def one(carry, xs):
+        mb = xs if valid_k is None else xs[0]
+        new_carry, loss = step_fn(carry, mb)
+        if valid_k is not None:
+            v = xs[1]
+            new_carry = jax.tree.map(lambda n, o: jnp.where(v, n, o),
+                                     new_carry, carry)
+        return new_carry, loss
+
+    xs = batch_k if valid_k is None else (batch_k, valid_k)
+    return lax.scan(one, carry0, xs)
+
+
+def make_local_train(loss_fn, opt_cfg, *, lr_b_mult: float = 5.0):
+    """One client's local round as a single scan (paper Algorithm 1 inner
+    loop): masked AdamW steps with LoRA+ per-half learning rates from a
+    shared start state.
+
+    Returns ``local_train(params, start, masks_k, batch_k, parity,
+    valid_k=None, opt0=None) -> (final adapters, per-step losses)``.
+    parity may be a traced int32 scalar (0=train-a, 1=train-b, 2=both);
+    opt0 is this client's fresh opt state (a row of the cohort's stacked
+    ``adamw.init_state(start, lead=(K,))``), built internally when None."""
+
+    def local_train(params, start, masks_k, batch_k, parity, valid_k=None,
+                    opt0=None):
+        def step_fn(carry, mb):
+            local, opt = carry
+            loss, grads = jax.value_and_grad(loss_fn)(local, params, mb)
+            upd = selection.adapter_update_masks(local, masks_k, parity)
+            lr_tree = adamw.lora_plus_lr_tree(local, lr_b_mult)
+            local, opt = adamw.apply_update(opt_cfg, local, grads, opt,
+                                            lr_tree=lr_tree, update_mask=upd)
+            return (local, opt), loss
+
+        carry0 = (start, adamw.init_state(start) if opt0 is None else opt0)
+        (final, _), losses = _scan_steps(step_fn, carry0, batch_k, valid_k)
+        return final, losses
+
+    return local_train
+
+
+def make_cohort_train_step(loss_fn, opt_cfg, *, lr_b_mult: float = 5.0):
+    """The whole cohort's local training as ONE jitted program:
+    vmap(local_train) over a leading client axis.
+
+    (params, start, masks_K, batch, valid, parity) -> (finals_K, losses)
+    with batch leaves (K, T, ...), masks_K a (K,)-stacked rank-mask tree
+    (heterogeneous ``client_ranks`` stack to per-client first-k or top-k
+    masks), valid (K, T) bool — or None for a step-uniform cohort, which
+    skips the padded-step carry selects entirely.  finals_K is the
+    (K,)-stacked trained adapters; the caller extracts per-client
+    deltas/uploads from it."""
+    local_train = make_local_train(loss_fn, opt_cfg, lr_b_mult=lr_b_mult)
+
+    @jax.jit
+    def cohort_step(params, start, masks_K, batch, valid, parity):
+        K = jax.tree.leaves(batch)[0].shape[0]
+        opt0_K = adamw.init_state(start, lead=(K,))   # client-stacked moments
+        if valid is None:      # step-uniform cohort: no padded-slot selects
+            def per_client(masks_k, batch_k, opt0_k):
+                return local_train(params, start, masks_k, batch_k, parity,
+                                   None, opt0_k)
+
+            return jax.vmap(per_client)(masks_K, batch, opt0_K)
+
+        def per_client(masks_k, batch_k, valid_k, opt0_k):
+            return local_train(params, start, masks_k, batch_k, parity,
+                               valid_k, opt0_k)
+
+        return jax.vmap(per_client)(masks_K, batch, valid, opt0_K)
+
+    return cohort_step
+
+
+def make_cohort_full_ft_step(loss_fn, opt_cfg):
+    """full_ft twin of ``make_cohort_train_step``: every base parameter
+    trains, no masks/parity.  (start_params, batch, valid) -> (finals_K,
+    losses)."""
+
+    @jax.jit
+    def cohort_step(start, batch, valid):
+        K = jax.tree.leaves(batch)[0].shape[0]
+        opt0_K = adamw.init_state(start, lead=(K,))   # client-stacked moments
+
+        def step_fn(carry, mb):
+            p, opt = carry
+            loss, grads = jax.value_and_grad(loss_fn)(p, mb)
+            p, opt = adamw.apply_update(opt_cfg, p, grads, opt)
+            return (p, opt), loss
+
+        def per_client(batch_k, valid_k, opt0_k):
+            carry0 = (start, opt0_k)
+            (final, _), losses = _scan_steps(step_fn, carry0, batch_k,
+                                             valid_k)
+            return final, losses
+
+        if valid is None:
+            return jax.vmap(lambda b, o: per_client(b, None, o))(batch,
+                                                                 opt0_K)
+        return jax.vmap(per_client)(batch, valid, opt0_K)
+
+    return cohort_step
+
+
+def stacked_rank_masks(adapters, client_ranks):
+    """(K,)-stacked HetLoRA-style first-k mask tree for a heterogeneous
+    cohort (one leading row per client's truncation rank)."""
+    per = [selection.first_k_masks(adapters, int(r)) for r in client_ranks]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
 
 
 def make_federated_train_step(cfg: ModelConfig, *, dist: DistConfig,
@@ -56,6 +183,8 @@ def make_federated_train_step(cfg: ModelConfig, *, dist: DistConfig,
         return M.lm_loss(cfg, params, adapters, mb, dist=dist,
                          lora_scale=scale, remat=remat)
 
+    inner = make_local_train(loss_fn, opt_cfg, lr_b_mult=lr_b_mult)
+
     def train_step(params, adapters, batch, parity, rank_masks, weights):
         """One federated round.
 
@@ -66,18 +195,7 @@ def make_federated_train_step(cfg: ModelConfig, *, dist: DistConfig,
         """
 
         def local_train(masks_k, batch_k):
-            opt0 = adamw.init_state(adapters)
-
-            def one(carry, mb):
-                local, opt = carry
-                loss, grads = jax.value_and_grad(loss_fn)(local, params, mb)
-                upd = selection.adapter_update_masks(local, masks_k, parity)
-                lr_tree = adamw.lora_plus_lr_tree(local, lr_b_mult)
-                local, opt = adamw.apply_update(opt_cfg, local, grads, opt,
-                                                lr_tree=lr_tree, update_mask=upd)
-                return (local, opt), loss
-
-            (local, _), losses = lax.scan(one, (adapters, opt0), batch_k)
+            local, losses = inner(params, adapters, masks_k, batch_k, parity)
             delta = tree_sub(local, adapters)
             upd = selection.adapter_update_masks(adapters, masks_k, parity)
             masked = jax.tree.map(lambda d, m: d * m.astype(d.dtype), delta, upd)

@@ -27,7 +27,8 @@ from repro.data.synthetic import make_classification, make_lm_stream
 
 def train_lm_federated(cfg, *, rounds, n_clients, rank, global_rank,
                        batch_size, seq_len, lr, seed=0, steps_per_round=4,
-                       method="lora_a2"):
+                       method="lora_a2", executor="looped",
+                       step_time_s=0.01):
     """Decoder-LM federated fine-tuning on synthetic shards (CPU track)."""
     data = make_lm_stream(seed, vocab=cfg.vocab_size, seq_len=seq_len,
                           n_seqs=n_clients * batch_size * steps_per_round)
@@ -36,7 +37,7 @@ def train_lm_federated(cfg, *, rounds, n_clients, rank, global_rank,
     fed = FedConfig(method=method, rank=rank, global_rank=global_rank,
                     rounds=rounds, local_epochs=1, batch_size=batch_size,
                     lr=lr, n_clients=n_clients, eval_every=max(1, rounds // 4),
-                    seed=seed)
+                    seed=seed, executor=executor, step_time_s=step_time_s)
     return run_federated(cfg, fed, data, None, client_idx)
 
 
@@ -57,7 +58,16 @@ def main():
     ap.add_argument("--batch-size", type=int, default=32)
     ap.add_argument("--lr", type=float, default=5e-4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--executor", default="vectorized",
+                    choices=["looped", "vectorized"],
+                    help="cohort compute backend (core/executors.py); "
+                         "fp32 sync trajectories are bit-identical, "
+                         "vectorized runs the round as one compiled step")
+    ap.add_argument("--step-time", default="0.01",
+                    help="simulated seconds per local step, or 'auto' to "
+                         "calibrate from the roofline model")
     args = ap.parse_args()
+    step_time = "auto" if args.step_time == "auto" else float(args.step_time)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -74,7 +84,8 @@ def main():
                         local_epochs=args.local_epochs,
                         batch_size=args.batch_size, lr=args.lr,
                         n_clients=args.clients, seed=args.seed,
-                        eval_every=max(1, args.rounds // 5))
+                        eval_every=max(1, args.rounds // 5),
+                        executor=args.executor, step_time_s=step_time)
         hist = run_federated(cfg, fed, train, test, parts)
         for r, acc, up in zip(hist["round"], hist["acc"], hist["uploaded"]):
             print(f"round {r:3d}  acc {acc:.4f}  uploaded {up:.3e}")
@@ -83,7 +94,8 @@ def main():
             cfg, rounds=args.rounds, n_clients=args.clients,
             rank=args.rank_budget, global_rank=args.global_rank,
             batch_size=min(args.batch_size, 8), seq_len=64, lr=args.lr,
-            seed=args.seed, method=args.method)
+            seed=args.seed, method=args.method, executor=args.executor,
+            step_time_s=step_time)
         for r, loss, up in zip(hist["round"], hist["loss"], hist["uploaded"]):
             print(f"round {r:3d}  loss {loss:.4f}  uploaded {up:.3e}")
     print(f"done in {time.time()-t0:.1f}s")

@@ -24,6 +24,19 @@ from jax.sharding import PartitionSpec as P
 from repro.models import common, runtime
 from repro.sharding.hints import DistConfig, NO_DIST, resolve_axis
 
+
+def _shard_map(fn, *, mesh, in_specs, out_specs):
+    """jax.shard_map under either API generation: the top-level name with
+    check_vma (new), or experimental.shard_map with check_rep (this jax)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm_exp
+    return sm_exp(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+
+
 NEG_INF = -1e30
 
 
@@ -287,11 +300,10 @@ def decode_attention_sharded(dist: DistConfig, q, k_cache, v_cache, pos,
 
     qspec = P(batch_axis, None, None, None)
     cspec = P(batch_axis, seq_axes, None, None)
-    return jax.shard_map(
+    return _shard_map(
         local_fn, mesh=mesh,
         in_specs=(qspec, cspec, cspec, P()),
         out_specs=qspec,
-        check_vma=False,
     )(q, k_cache, v_cache, pos)
 
 
@@ -332,11 +344,10 @@ def update_cache(dist: DistConfig, cache_k, cache_v, k_new, v_new, pos):
 
     cspec = P(batch_axis, seq_axes, None, None)
     nspec = P(batch_axis, None, None, None)
-    return jax.shard_map(
+    return _shard_map(
         local_fn, mesh=mesh,
         in_specs=(cspec, cspec, nspec, nspec, P()),
         out_specs=(cspec, cspec),
-        check_vma=False,
     )(cache_k, cache_v, k_new, v_new, pos)
 
 

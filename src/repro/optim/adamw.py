@@ -18,11 +18,22 @@ class AdamWConfig:
     weight_decay: float = 0.0
 
 
-def init_state(params):
+def init_state(params, lead=()):
+    """Fresh AdamW moments for ``params``.
+
+    lead: optional leading axes prepended to every moment leaf (and the
+    step count) — ``lead=(K,)`` is how the cohort programs
+    (launch/steps.make_cohort_train_step / make_cohort_full_ft_step) build
+    the client-stacked opt state their vmapped scans carry, one moment row
+    per client.  Zero-init means the stacked state is bit-identical to K
+    independent ``init_state(params)`` copies."""
+    def zeros(x):
+        return jnp.zeros(lead + x.shape, jnp.float32)
+
     return {
-        "mu": jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), params),
-        "nu": jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), params),
-        "count": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros(lead, jnp.int32),
     }
 
 

@@ -1,0 +1,217 @@
+"""Cross-executor parity: the vectorized cohort engine must reproduce the
+looped reference bit-for-bit on the fp32 adapter track.
+
+For each method × {sync, async} on the tiny encoder config the suite
+asserts eval/loss histories, uploaded/downloaded byte series, and the
+final adapters are *identical* between ``executor="looped"`` and
+``executor="vectorized"`` — the same gate PR 3 applied to the socket
+fleet.  full_ft is the documented exception: vmapping full-parameter
+gradients reorders XLA reductions (embedding scatter, bias sums), so its
+cross-executor parity is numerical (~1e-6), not bitwise.
+
+A fast subset (one sync + one async case + the unit tests) runs in the CI
+fast suite; the full matrix is @slow.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import executors
+from repro.core.federation import FedConfig, make_eval, resolve_step_time, \
+    run_federated
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_classification
+
+CFG = get_config("roberta-sim")
+
+
+@pytest.fixture(scope="module")
+def data():
+    train, test = make_classification(0, n_classes=8, vocab=CFG.vocab_size,
+                                      seq_len=16, n_train=480, n_test=160)
+    parts = dirichlet_partition(0, train.labels, 4, alpha=0.5)
+    return train, test, parts
+
+
+def _fed(method, executor, **kw):
+    base = dict(method=method, rank=2, global_rank=4, rounds=2,
+                local_epochs=1, batch_size=32, n_clients=4, eval_every=1,
+                seed=0, executor=executor)
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _pair(data, method, **kw):
+    train, test, parts = data
+    h_loop = run_federated(CFG, _fed(method, "looped", **kw),
+                           train, test, parts)
+    h_vec = run_federated(CFG, _fed(method, "vectorized", **kw),
+                          train, test, parts)
+    return h_loop, h_vec
+
+
+def _final_tree(h):
+    return h["adapters"] if "adapters" in h else h["params"]
+
+
+def _assert_bit_parity(h_loop, h_vec):
+    assert h_loop["round"] == h_vec["round"]
+    assert h_loop["acc"] == h_vec["acc"]
+    assert h_loop["loss"] == h_vec["loss"]
+    assert h_loop["uploaded"] == h_vec["uploaded"]
+    assert h_loop["downloaded"] == h_vec["downloaded"]
+    assert h_loop["sim_time"] == h_vec["sim_time"]
+    for x, y in zip(jax.tree.leaves(_final_tree(h_loop)),
+                    jax.tree.leaves(_final_tree(h_vec))):
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# fast subset (CI fast suite)
+# ---------------------------------------------------------------------------
+
+
+def test_lora_a2_sync_bit_parity(data):
+    """The headline gate: probe epoch + kernel-batched scoring + top-k
+    selection + alternating-freeze training, one compiled step per round,
+    bit-for-bit the looped trajectory."""
+    _assert_bit_parity(*_pair(data, "lora_a2"))
+
+
+def test_fl_lora_async_bit_parity(data):
+    """Async launches are singleton cohorts; the vectorized backend must
+    degenerate to the reference per-batch step bit-exactly."""
+    _assert_bit_parity(*_pair(data, "fl_lora", server_mode="async",
+                              buffer_size=2))
+
+
+def test_unknown_executor_raises(data):
+    train, test, parts = data
+    with pytest.raises(ValueError, match="unknown executor"):
+        run_federated(CFG, _fed("fl_lora", "warp"), train, test, parts)
+
+
+def test_eval_padded_tail_matches_unpadded(data):
+    """make_eval pads the remainder batch with a validity mask; accuracy
+    must equal the plain unbatched computation for every batch size."""
+    from repro.core import lora
+    from repro.models import model as M
+    train, test, parts = data
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(CFG, key)
+    adapters = lora.init_adapters(CFG, key, 4)
+    scale = lora.lora_scale(4)
+    logits = M.classify(CFG, params, adapters,
+                        jax.numpy.asarray(test.tokens), lora_scale=scale)
+    want = float((np.asarray(jax.numpy.argmax(logits, -1)) ==
+                  np.asarray(test.labels)).mean())
+    evaluate = make_eval(CFG, scale)
+    for batch in (64, 100, 160, 256):   # 160 divides n; the others leave tails
+        got = evaluate(params, adapters, test, batch=batch)
+        assert got == pytest.approx(want, abs=1e-12), batch
+
+
+def test_auto_step_time_resolves_from_roofline(data):
+    """step_time_s="auto" materializes the analytic per-step roofline
+    seconds for this arch/shape, and the sim clock uses it."""
+    from repro.launch.roofline import step_time_estimate
+    train, test, parts = data
+    fed = _fed("fl_lora", "looped", step_time_s="auto", rounds=1)
+    resolved = resolve_step_time(fed, CFG, train)
+    want = step_time_estimate(CFG, batch_size=fed.batch_size,
+                              seq_len=train.tokens.shape[-1])
+    assert isinstance(resolved.step_time_s, float)
+    assert resolved.step_time_s == pytest.approx(want)
+    assert resolved.step_time_s > 0
+    # a run under "auto" produces sim_time scaled by the resolved value
+    h_auto = run_federated(CFG, fed, train, test, parts)
+    h_const = run_federated(
+        CFG, dataclasses.replace(fed, step_time_s=resolved.step_time_s),
+        train, test, parts)
+    assert h_auto["sim_time"] == h_const["sim_time"]
+    assert h_auto["sim_time"][-1] > 0
+
+
+def test_plan_consumes_rng_like_skip(data):
+    """plan_client and skip_client_rng must consume identical rng draws —
+    the fleet replay scheme depends on it."""
+    train, test, parts = data
+    fed = _fed("lora_a2", "looped")
+    r1 = np.random.default_rng(0)
+    r2 = np.random.default_rng(0)
+    ds = {"labels": np.zeros(100)}
+    executors.plan_client(fed, r1, ds, 0)
+    for _ in range(fed.probe_epochs + fed.local_epochs):
+        r2.permutation(100)
+    assert r1.bit_generator.state == r2.bit_generator.state
+
+
+# ---------------------------------------------------------------------------
+# full matrix (@slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["fl_lora", "ffa_lora", "flexlora",
+                                    "hetlora", "lora_a2"])
+def test_sync_bit_parity_all_methods(method, data):
+    kw = {"client_ranks": [1, 2, 2, 4]} if method == "hetlora" else {}
+    _assert_bit_parity(*_pair(data, method, **kw))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["fl_lora", "ffa_lora", "lora_a2"])
+def test_async_bit_parity(method, data):
+    _assert_bit_parity(*_pair(data, method, server_mode="async",
+                              buffer_size=2))
+
+
+@pytest.mark.slow
+def test_lora_a2_heterogeneous_ranks_bit_parity(data):
+    _assert_bit_parity(*_pair(data, "lora_a2", client_ranks=[1, 2, 2, 4]))
+
+
+@pytest.mark.slow
+def test_lora_a2_partial_participation_bit_parity(data):
+    _assert_bit_parity(*_pair(data, "lora_a2", participation=0.5))
+
+
+@pytest.mark.slow
+def test_lora_a2_delta_downlink_bit_parity(data):
+    _assert_bit_parity(*_pair(data, "lora_a2", downlink_codec="delta"))
+
+
+@pytest.mark.slow
+def test_dp_int8_bit_parity(data):
+    """The DP key stream and int8 stochastic-rounding seeds are consumed in
+    the payload stage, launch-ordered — identical across backends."""
+    _assert_bit_parity(*_pair(data, "lora_a2", dp_epsilon=3.0, codec="int8"))
+
+
+@pytest.mark.slow
+def test_full_ft_close_parity(data):
+    """full_ft is the documented non-bitwise case: vmapped full-parameter
+    grads reorder XLA reductions.  Histories and finals agree numerically."""
+    h_loop, h_vec = _pair(data, "full_ft")
+    assert h_loop["acc"] == h_vec["acc"]
+    assert h_loop["uploaded"] == h_vec["uploaded"]
+    assert h_loop["downloaded"] == h_vec["downloaded"]
+    np.testing.assert_allclose(h_loop["loss"], h_vec["loss"], rtol=1e-5)
+    for x, y in zip(jax.tree.leaves(_final_tree(h_loop)),
+                    jax.tree.leaves(_final_tree(h_vec))):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_vectorized_learns(data):
+    """Sanity beyond parity: the hot path trains to above-chance accuracy."""
+    train, test, parts = data
+    hist = run_federated(CFG, _fed("lora_a2", "vectorized", rounds=10,
+                                   local_epochs=2, eval_every=5),
+                         train, test, parts)
+    assert hist["acc"][-1] > 1.5 / 8

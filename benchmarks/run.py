@@ -60,6 +60,7 @@ ARTIFACTS = {
     "comm": "comm_cost",
     "codec": "codec_accuracy",
     "cohort": "cohort_throughput",
+    "async": "async_stragglers",
 }
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 REGRESSION_TOL = 0.01   # fail when measured bytes grow by more than 1%

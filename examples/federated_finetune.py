@@ -35,7 +35,9 @@ def main():
                     help="server→client broadcast codec (delta = only rank "
                          "slots changed since the client's last fetch)")
     ap.add_argument("--server", default="sync", choices=["sync", "async"],
-                    help="async = FedBuff-style buffered aggregation")
+                    help="async = generation-versioned cohort aggregation "
+                         "(works for every method, flexlora/hetlora "
+                         "included)")
     ap.add_argument("--stragglers", action="store_true",
                     help="heterogeneous fleet: 25%% of clients 8x slower")
     ap.add_argument("--out", default="artifacts/federated_adapters.npz")

@@ -3,14 +3,24 @@
 Forks N client processes; each fetches the global broadcast from the
 server's socket, trains its own shard locally, and uploads the codec
 payload over the framed wire protocol (comm/transport.py).  With --check
-the same configuration is re-run on the in-process sync engine and the
+the same sync configuration is re-run on the in-process engine and the
 two are asserted bit-for-bit identical under the fp32 codec: same eval
 history, same uploaded/downloaded byte totals, bit-identical final
 adapters.  CI's multiproc-smoke job runs exactly that on every push.
 
+With --server async the fleet runs the generation-versioned cohort
+protocol (comm/server.GenServer) — every method, flexlora and hetlora
+included, aggregates per cohort generation over the real socket.  Arrival
+order is wall-clock there, so --check asserts the protocol invariants
+instead of bit-parity: the version reached the target, every generation's
+accounting balanced, and the transport's byte tally equals the history's.
+CI's async-fleet-smoke job runs the flexlora variant on every push.
+
     PYTHONPATH=src python examples/multiproc_federated.py \
         --clients 4 --rounds 3 --check             # UDS (default)
     PYTHONPATH=src python examples/multiproc_federated.py --transport tcp
+    PYTHONPATH=src python examples/multiproc_federated.py \
+        --server async --method flexlora --check   # generation protocol
 """
 import argparse
 import dataclasses
@@ -26,7 +36,17 @@ from repro.launch import fleet
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=4)
-    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="sync rounds, or async generations")
+    ap.add_argument("--server", default="sync", choices=["sync", "async"],
+                    help="async = generation-versioned cohort aggregation "
+                         "(all five methods) over the real socket")
+    ap.add_argument("--method", default="lora_a2",
+                    choices=["lora_a2", "fl_lora", "ffa_lora", "flexlora",
+                             "hetlora"])
+    ap.add_argument("--buffer", type=int, default=None,
+                    help="async generation fill target (default: half the "
+                         "fleet)")
     ap.add_argument("--transport", default="uds", choices=["uds", "tcp"],
                     help="uds = Unix-domain socket (default), tcp = loopback")
     ap.add_argument("--codec", default="fp32",
@@ -48,11 +68,15 @@ def main():
     args = ap.parse_args()
 
     spec = fleet.DataSpec()
-    fed = FedConfig(method="lora_a2", rank=2, global_rank=4,
+    client_ranks = None
+    if args.method == "hetlora":
+        client_ranks = [(1, 2, 2, 4)[k % 4] for k in range(args.clients)]
+    fed = FedConfig(method=args.method, rank=2, global_rank=4,
                     rounds=args.rounds, local_epochs=1, batch_size=32,
                     n_clients=args.clients, eval_every=1, seed=0,
                     codec=args.codec, downlink_codec=args.downlink,
-                    executor=args.executor)
+                    executor=args.executor, server_mode=args.server,
+                    buffer_size=args.buffer, client_ranks=client_ranks)
 
     t0 = time.time()
     hist = fleet.launch_fleet(spec, fed, transport=args.transport,
@@ -67,6 +91,29 @@ def main():
           f"rounds in {wall:.1f}s  measured up {tr['total_up']/1e6:.3f} MB"
           f"  down {tr['total_down']/1e6:.3f} MB"
           f"  frame+control overhead {tr['overhead_up']+tr['overhead_down']:.0f} B")
+
+    if args.check and args.server == "async":
+        # wall-clock arrival order is nondeterministic, so the async check
+        # asserts protocol invariants rather than bit-parity
+        import jax
+        assert hist["round"], "no generation was recorded"
+        assert hist["round"][-1] == args.rounds, \
+            (hist["round"], hist["gen_stats"])
+        assert all(np.isfinite(np.asarray(x)).all()
+                   for x in jax.tree.leaves(hist["adapters"]))
+        s = hist["gen_stats"]
+        assert s["flushed"] + s["partial"] >= 1, s
+        assert tr["total_up"] == hist["uploaded_cum"], \
+            (tr["total_up"], hist["uploaded_cum"])
+        assert tr["total_down"] == hist["downloaded_cum"], \
+            (tr["total_down"], hist["downloaded_cum"])
+        print(f"ASYNC OK: {args.method} reached generation "
+              f"{hist['round'][-1]} ({s['flushed']} full + {s['partial']} "
+              f"partial flushes, {s['stale_merged']} stale merges, "
+              f"{s['drops']} drops; max staleness "
+              f"{max(hist['staleness'], default=0)}); byte accounting "
+              f"balances")
+        return
 
     if args.check:
         net = network.ideal_network(args.clients)

@@ -3,37 +3,55 @@
 SyncServer   — one aggregation per round over the round's surviving uploads;
                reproduces the seed training path exactly under the fp32
                codec and an ideal network.
+GenServer    — generation-versioned async cohort aggregation: every
+               broadcast is stamped with a generation id (the global
+               version), uploads accumulate per generation, and the *full
+               cohort aggregator* (including flexlora's SVD and hetlora's
+               rank-weighted sparsity decay) runs once a generation's
+               buffer reaches its fill target.  Stale uploads (arriving for
+               a generation that already flushed) and partial generations
+               follow an explicit policy — staleness-weighted merge vs.
+               drop (``FedConfig.gen_stale_policy``).  This lifts the old
+               delta-additive restriction: all five adapter methods run
+               async.  With generation size == cohort size, zero staleness,
+               and the fp32 codec the generation path reproduces the sync
+               trajectory bit-for-bit (tests/test_async_cohort.py).
 BuffServer   — FedBuff-style async buffered aggregation (Nguyen et al.,
                2022): updates are buffered as they arrive, each weighted by
                data size × staleness discount (1+τ)^(-α); when the buffer
                holds K updates the server applies their normalized sum and
-               bumps the global version.  Only delta-additive methods are
-               supported async (fl_lora / ffa_lora / lora_a2) — flexlora
-               and hetlora need the full synchronized cohort.
+               bumps the global version.  Kept as the reference
+               unsynchronized aggregator; it remains delta-additive only
+               (fl_lora / ffa_lora / lora_a2) — the engine's async driver
+               now uses GenServer, which handles every method.
 
 Broadcaster — the server→client downlink under ``FedConfig.downlink_codec``
                (fp32 | bf16 | delta).  ``delta`` ships only the rank slots
                that changed since the client's last fetch, versioned
-               per-client on the sync path and per-buffer-generation on the
-               async path.
+               per-client on the sync path and per-generation on the async
+               path.
 
-Both servers decode payloads through comm/codec.py; neither ever sees a
+All servers decode payloads through comm/codec.py; none ever sees a
 client's in-memory pytree directly.  Symmetrically, clients only ever see
 the Broadcaster's *decoded* payload, never the server's pytree.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
 from repro.comm import codec
 from repro.core import aggregate, selection
 from repro.core.lora import iter_modules
-from repro.utils import tree_add, tree_scale, tree_weighted_sum
+from repro.utils import tree_add, tree_scale, tree_sub, tree_weighted_sum
 
-ASYNC_METHODS = ("fl_lora", "ffa_lora", "lora_a2")
+# every adapter-track method aggregates async through GenServer's
+# generation protocol; BuffServer (FedBuff) keeps the delta-additive subset
+ASYNC_METHODS = ("fl_lora", "ffa_lora", "flexlora", "hetlora", "lora_a2")
+BUFF_METHODS = ("fl_lora", "ffa_lora", "lora_a2")
+GEN_POLICIES = ("merge", "drop")
 
 
 @dataclasses.dataclass
@@ -130,6 +148,35 @@ class Broadcaster:
         return payload, codec.apply_update(prev, payload)
 
 
+def aggregate_cohort(method: str, adapters, updates: List[ClientUpdate], *,
+                     r_G: Optional[int] = None,
+                     client_rank_list: Optional[Sequence[int]] = None,
+                     hetlora_gamma: float = 0.99):
+    """Decode one cohort's uploads and fold them into ``adapters`` with the
+    method's full aggregator.  Weights renormalize over the given updates
+    (dropped uploads never get here).  The single cohort-aggregation code
+    path shared by SyncServer (one call per round) and GenServer (one call
+    per generation flush / stale merge) — which is what makes the async
+    generation path bit-identical to sync in the degenerate configuration.
+    Returns (new adapters, decoded deltas)."""
+    deltas = [codec.decode(u.payload) for u in updates]
+    wsum = sum(u.weight for u in updates)
+    w = [u.weight / wsum for u in updates]
+    if method == "fl_lora":
+        new = aggregate.fedavg(adapters, deltas, w)
+    elif method in ("ffa_lora", "lora_a2"):
+        new = aggregate.lora_a2(adapters, deltas, w)
+    elif method == "flexlora":
+        finals = [tree_add(adapters, d) for d in deltas]
+        new = aggregate.flexlora(adapters, finals, w, r_G)
+    elif method == "hetlora":
+        ranks = [client_rank_list[u.client_id] for u in updates]
+        new = aggregate.hetlora(adapters, deltas, w, ranks, hetlora_gamma)
+    else:
+        raise ValueError(method)
+    return new, deltas
+
+
 class SyncServer:
     """Round-synchronous aggregation endpoint for every paper method."""
 
@@ -145,29 +192,247 @@ class SyncServer:
 
     def aggregate_round(self, updates: List[ClientUpdate]):
         """Decode the round's uploads and fold them into the global state.
-        Weights renormalize over the survivors (dropped uploads never get
-        here).  Returns the decoded deltas (for similarity tracking)."""
+        Returns the decoded deltas (for similarity tracking)."""
         self.version += 1
         if not updates:
             return []
-        deltas = [codec.decode(u.payload) for u in updates]
-        wsum = sum(u.weight for u in updates)
-        w = [u.weight / wsum for u in updates]
-        if self.method == "fl_lora":
-            self.adapters = aggregate.fedavg(self.adapters, deltas, w)
-        elif self.method in ("ffa_lora", "lora_a2"):
-            self.adapters = aggregate.lora_a2(self.adapters, deltas, w)
-        elif self.method == "flexlora":
-            finals = [tree_add(self.adapters, d) for d in deltas]
-            self.adapters = aggregate.flexlora(self.adapters, finals, w,
-                                               self.r_G)
-        elif self.method == "hetlora":
-            ranks = [self.client_rank_list[u.client_id] for u in updates]
-            self.adapters = aggregate.hetlora(self.adapters, deltas, w,
-                                              ranks, self.hetlora_gamma)
-        else:
-            raise ValueError(self.method)
+        self.adapters, deltas = aggregate_cohort(
+            self.method, self.adapters, updates, r_G=self.r_G,
+            client_rank_list=self.client_rank_list,
+            hetlora_gamma=self.hetlora_gamma)
         return deltas
+
+
+@dataclasses.dataclass
+class _Generation:
+    """Server-side accounting for one cohort generation."""
+    origin: object                 # global adapters snapshot when it opened
+    expected: int = 0              # launches begun into this generation
+    outstanding: int = 0           # launches with no terminal event yet
+    drops: int = 0                 # launches that ended in a dropped upload
+    buffer: Dict[int, ClientUpdate] = dataclasses.field(default_factory=dict)
+    members: Set[int] = dataclasses.field(default_factory=set)
+
+
+class GenServer:
+    """Generation-versioned async cohort aggregation.
+
+    The protocol: every broadcast carries a generation id (= the server's
+    global version); a client launch joins the *open* generation
+    (``begin``), trains from that generation's origin state, and uploads
+    tagged with the generation id.  Uploads accumulate per generation, and
+    when the open generation's buffer reaches ``gen_size`` the full cohort
+    aggregator runs over it — sorted by client id, so the float-sum order
+    matches the sync server's launch order — and the version bumps, opening
+    the next generation.  Because a generation is a synchronized cohort,
+    FlexLoRA's product-SVD and HetLoRA's rank-weighted sparsity decay apply
+    exactly as in the sync path: with ``gen_size`` equal to the cohort
+    size, zero staleness, and the fp32 codec, the trajectory is
+    bit-for-bit the sync trajectory (shared ``aggregate_cohort`` path).
+
+    Stale/partial policy (``stale_policy``):
+
+    ``merge``  uploads arriving for a closed generation g accumulate until
+               no launch of g is still in flight, then fold in as one
+               staleness-discounted correction:
+
+                   global += β · (agg(origin_g, stale uploads) − origin_g)
+                   β = server_lr · (1 + τ)^(−staleness_alpha),  τ = v − g
+
+               A partial open generation (closed explicitly via
+               ``close_partial``) aggregates over its renormalized
+               survivors — exactly the sync server's drop semantics.
+    ``drop``   stale uploads and partial buffers are discarded (the
+               version still turns over on ``close_partial`` so the
+               protocol stays live).
+
+    One upload per client per generation: duplicates — including a
+    duplicate upload for a stale generation — are rejected without touching
+    the accounting, so a misbehaving peer cannot corrupt the buffer.
+    """
+
+    def __init__(self, method: str, adapters, *, gen_size: int,
+                 staleness_alpha: float = 0.5, server_lr: float = 1.0,
+                 stale_policy: str = "merge", r_G: Optional[int] = None,
+                 client_rank_list: Optional[Sequence[int]] = None,
+                 hetlora_gamma: float = 0.99):
+        if method not in ASYNC_METHODS:
+            raise ValueError(f"unknown async method {method!r}; the "
+                             f"generation protocol supports {ASYNC_METHODS}")
+        if gen_size < 1:
+            raise ValueError("gen_size must be >= 1")
+        if stale_policy not in GEN_POLICIES:
+            raise ValueError(f"unknown stale policy {stale_policy!r}; want "
+                             f"one of {GEN_POLICIES}")
+        self.method = method
+        self.adapters = adapters
+        self.gen_size = gen_size
+        self.staleness_alpha = staleness_alpha
+        self.server_lr = server_lr
+        self.stale_policy = stale_policy
+        self.r_G = r_G
+        self.client_rank_list = client_rank_list
+        self.hetlora_gamma = hetlora_gamma
+        self.version = 0
+        self.staleness_log: List[int] = []
+        self._gens: Dict[int, _Generation] = {}
+        self.stats = {"flushed": 0, "partial": 0, "stale_merged": 0,
+                      "stale_dropped": 0, "partial_dropped": 0,
+                      "duplicates": 0, "drops": 0, "merged_updates": 0}
+
+    # -- launch side --------------------------------------------------------
+
+    @property
+    def broadcast_state(self):
+        """What a launch trains from: the open generation's origin.  Fixed
+        for the generation's lifetime — a stale merge between launches of
+        the same generation must not split the cohort's start state (and
+        the Broadcaster's dense cache is keyed by version, so it could not
+        serve a mid-generation change anyway)."""
+        g = self._gens.get(self.version)
+        return g.origin if g is not None else self.adapters
+
+    def begin(self, client_id: int) -> int:
+        """Register one launch into the open generation; returns its id."""
+        g = self._gens.setdefault(self.version,
+                                  _Generation(origin=self.adapters))
+        g.expected += 1
+        g.outstanding += 1
+        return self.version
+
+    def in_current(self, client_id: int) -> bool:
+        """Has this client already contributed to the open generation?  (A
+        contributor waits for the flush before relaunching — a second
+        upload for the same generation would be a duplicate.)"""
+        g = self._gens.get(self.version)
+        return g is not None and client_id in g.members
+
+    def pending(self) -> Dict[int, Dict[str, int]]:
+        """Accounting snapshot per tracked generation (tests/diagnostics)."""
+        return {gid: {"expected": g.expected, "outstanding": g.outstanding,
+                      "drops": g.drops, "buffered": len(g.buffer)}
+                for gid, g in sorted(self._gens.items())}
+
+    # -- arrival side -------------------------------------------------------
+
+    def receive(self, update: ClientUpdate) -> bool:
+        """Buffer one arrived upload for its generation; True when it
+        completed the open generation (version bump)."""
+        gid = update.version
+        g = self._gens.get(gid)
+        if g is None or update.client_id in g.members:
+            # unknown/finalized generation, or a duplicate upload for one —
+            # rejected outright, the accounting stays balanced
+            self.stats["duplicates"] += 1
+            return False
+        g.outstanding -= 1
+        self.staleness_log.append(self.version - gid)
+        if gid == self.version:
+            g.members.add(update.client_id)
+            g.buffer[update.client_id] = update
+            if len(g.buffer) >= self.gen_size:
+                self._flush_current(partial=False)
+                return True
+            return False
+        # stale: its generation already flushed.  The client joins members
+        # either way — that is what makes a replayed stale upload a
+        # detectable duplicate even when the policy discarded the original
+        g.members.add(update.client_id)
+        if self.stale_policy == "merge":
+            g.buffer[update.client_id] = update
+        else:
+            self.stats["stale_dropped"] += 1
+        if g.outstanding <= 0:
+            self._close_stale(gid)
+        return False
+
+    def record_drop(self, gen: int, client_id: int) -> None:
+        """A launch into ``gen`` ended without an upload (lost uplink,
+        disconnected fleet client)."""
+        g = self._gens.get(gen)
+        if g is None:
+            return
+        g.outstanding -= 1
+        g.drops += 1
+        self.stats["drops"] += 1
+        if gen < self.version and g.outstanding <= 0:
+            self._close_stale(gen)
+
+    # -- generation turnover ------------------------------------------------
+
+    def _apply_cohort(self, origin, updates: List[ClientUpdate]):
+        updates = sorted(updates, key=lambda u: u.client_id)
+        new, _ = aggregate_cohort(self.method, origin, updates,
+                                  r_G=self.r_G,
+                                  client_rank_list=self.client_rank_list,
+                                  hetlora_gamma=self.hetlora_gamma)
+        return new
+
+    def _flush_current(self, partial: bool) -> None:
+        g = self._gens[self.version]
+        new = self._apply_cohort(g.origin, list(g.buffer.values()))
+        if self.adapters is g.origin:
+            # no stale merge moved the global since this generation opened:
+            # the aggregation applies exactly (the sync-equivalent path)
+            self.adapters = new
+        else:
+            # carry the cohort's movement onto the merge-corrected state
+            self.adapters = tree_add(self.adapters, tree_sub(new, g.origin))
+        gid = self.version
+        self.version += 1
+        self.stats["partial" if partial else "flushed"] += 1
+        g.buffer = {}
+        if g.outstanding <= 0:
+            del self._gens[gid]
+        # else: keep tracking the generation — its in-flight stragglers
+        # arrive stale and close it via receive()/record_drop()
+
+    def _close_stale(self, gid: int) -> None:
+        g = self._gens.pop(gid)
+        if not g.buffer or self.stale_policy != "merge":
+            return
+        tau = self.version - gid
+        beta = self.server_lr * (1.0 + tau) ** (-self.staleness_alpha)
+        new = self._apply_cohort(g.origin, list(g.buffer.values()))
+        self.adapters = tree_add(self.adapters,
+                                 tree_scale(tree_sub(new, g.origin), beta))
+        self.stats["stale_merged"] += 1
+        self.stats["merged_updates"] += len(g.buffer)
+
+    def close_partial(self) -> bool:
+        """Turn over an open generation that can no longer fill (every live
+        client already contributed and nothing is in flight).  ``merge``
+        aggregates the renormalized survivors; ``drop`` discards the buffer
+        (tallied as ``partial_dropped`` — these uploads were on time, not
+        stale).  Either way the version bumps, counted in ``partial``, so
+        ``flushed + partial`` equals generation turnovers under both
+        policies and held fetches can proceed.  True when an aggregation
+        was applied."""
+        g = self._gens.get(self.version)
+        if g is None or not g.buffer:
+            return False
+        if self.stale_policy == "merge":
+            self._flush_current(partial=True)
+            return True
+        self.stats["partial"] += 1
+        self.stats["partial_dropped"] += len(g.buffer)
+        gid = self.version
+        g.buffer = {}
+        self.version += 1
+        if g.outstanding <= 0:
+            del self._gens[gid]
+        return False
+
+    def finalize(self) -> bool:
+        """End of run: close every tracked generation — stale ones per the
+        stale policy, the open one as a partial generation.  True when the
+        open generation flushed (the driver records that as a round)."""
+        for gid in sorted(self._gens):
+            if gid < self.version and gid in self._gens:
+                self._close_stale(gid)
+        bumped = self.close_partial()
+        self._gens.clear()
+        return bumped
 
 
 class BuffServer:
@@ -177,10 +442,11 @@ class BuffServer:
 
     def __init__(self, method: str, adapters, *, buffer_size: int,
                  staleness_alpha: float = 0.5, server_lr: float = 1.0):
-        if method not in ASYNC_METHODS:
+        if method not in BUFF_METHODS:
             raise ValueError(
-                f"async aggregation supports {ASYNC_METHODS}, got {method!r}"
-                " (flexlora/hetlora need a synchronized cohort)")
+                f"FedBuff buffering is delta-additive only ({BUFF_METHODS}),"
+                f" got {method!r} — cohort methods run async through the"
+                " generation protocol (GenServer)")
         if buffer_size < 1:
             raise ValueError("buffer_size must be >= 1")
         self.method = method

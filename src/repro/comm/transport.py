@@ -17,7 +17,12 @@ Two layers live here:
 
    The version field is the wire-protocol version on HELLO frames and the
    global model version everywhere else (the server's on BCAST, the version
-   the client trained from on FETCH/UPLOAD).  Payloads are the
+   the client trained from on FETCH/UPLOAD).  On the async fleet path the
+   global version IS the generation id of the cohort-generation protocol
+   (comm/server.GenServer): a BCAST stamps the generation the fetching
+   client joins, and the client echoes that id on its META/UPLOAD frames,
+   which is how the server routes an upload into the right generation
+   buffer — on time, stale, or duplicate.  Payloads are the
    self-describing ``comm/codec.py`` byte strings — the same bytes the
    simulated path accounts, which is what makes ``traffic()`` comparable
    across backends: ``bytes_up``/``bytes_down`` count only BCAST/UPLOAD

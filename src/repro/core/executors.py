@@ -293,13 +293,18 @@ class VectorizedExecutor(ClientExecutor):
 
     Entries are grouped by (bitwise-identical start state, parity); on the
     sync path every participant decodes the same broadcast, so a round is
-    one group.  Each group then splits into step-count buckets
+    one group — and the async driver's generation launch/harvest loop
+    (core/federation._run_async) batches every launch that joins a
+    generation into one cohort sharing that generation's origin state, so
+    async generations compile through the same cohort program instead of
+    degenerating to singletons.  Each group then splits into step-count
+    buckets
     (``_step_buckets``): clients with similar local step counts share one
     compiled call, which caps the compute wasted on padded slots at
     WASTE_CAP while keeping the compiled-shape set small and fixed across
     rounds.  A step-uniform bucket drops the valid mask entirely (no
-    padded-step carry selects).  Singleton buckets (the async driver and
-    the fleet client launch one client at a time; step-count outliers)
+    padded-step carry selects).  Singleton buckets (fleet clients and
+    stale async relaunches are cohorts of one; step-count outliers)
     degenerate to the per-batch reference step: a cohort of one has
     nothing to vectorize, and the fused scan program's XLA fusion context
     can wobble the *reported loss scalar* by 1 ulp for some shapes even
@@ -323,8 +328,8 @@ class VectorizedExecutor(ClientExecutor):
         for gidxs in _group_entries(entries):
             for idxs in _step_buckets(plans, gidxs):
                 if len(idxs) == 1:
-                    # a cohort of one has nothing to vectorize (the async
-                    # driver's and fleet client's case, or a step-count
+                    # a cohort of one has nothing to vectorize (a fleet
+                    # client, a stale async relaunch, or a step-count
                     # outlier) — the per-batch reference step keeps it
                     # bit-exact with `looped` at zero extra compiles
                     i = idxs[0]

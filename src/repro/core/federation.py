@@ -34,9 +34,16 @@ element section is asserted to agree with the analytic closed form
 (_upload_count).  Two server modes:
 
     server_mode='sync'   one aggregation per round (the paper's loop)
-    server_mode='async'  FedBuff-style buffered aggregation under the
-                         simulated clock — stragglers no longer gate the
-                         round; staleness is discounted by (1+τ)^(-α)
+    server_mode='async'  generation-versioned cohort aggregation under the
+                         simulated clock (comm/server.GenServer): every
+                         broadcast is stamped with a generation id, uploads
+                         accumulate per generation, and the full cohort
+                         aggregator — flexlora and hetlora included — runs
+                         once a generation's buffer reaches its fill
+                         target.  Stragglers no longer gate the round;
+                         stale/partial generations follow
+                         ``gen_stale_policy`` (staleness-weighted merge
+                         with discount (1+τ)^(-α), or drop)
 """
 from __future__ import annotations
 
@@ -52,7 +59,7 @@ from repro.comm import codec
 from repro.comm import network as net
 from repro.comm import pipeline
 from repro.comm import transport as xport
-from repro.comm.server import Broadcaster, BuffServer, ClientUpdate, \
+from repro.comm.server import Broadcaster, ClientUpdate, GenServer, \
     SyncServer
 from repro.configs.base import ModelConfig
 from repro.core import aggregate, executors, lora, selection
@@ -96,10 +103,12 @@ class FedConfig:
     # --- communication subsystem (repro.comm) ---
     codec: str = "fp32"           # uplink element codec: fp32 | bf16 | int8
     downlink_codec: str = "fp32"  # server→client: fp32 | bf16 | delta
-    server_mode: str = "sync"     # 'sync' | 'async' (FedBuff-style buffered)
-    buffer_size: Optional[int] = None  # async: aggregate every K arrivals
+    server_mode: str = "sync"     # 'sync' | 'async' (generation-versioned)
+    buffer_size: Optional[int] = None  # async: generation fill target
     staleness_alpha: float = 0.5  # async: staleness discount exponent
-    server_lr: float = 1.0        # async: server step size on the buffer sum
+    server_lr: float = 1.0        # async: step size on stale-merge corrections
+    gen_stale_policy: str = "merge"    # async: stale/partial generations —
+    # 'merge' (staleness-weighted fold-in) | 'drop' (discard)
     network: Optional[object] = None   # SimulatedNetwork or comm.transport.Transport
     step_time_s: Union[float, str] = 0.01
     # simulated seconds per local step — the single source of truth (the
@@ -436,82 +445,161 @@ def _run_sync(ctx: _Ctx, adapters, history, test_ds, evaluate):
     history["adapters"] = server.adapters
 
 
+def _ordered_losses(pending):
+    """Flatten ``{generation: {client: [losses]}}`` in (generation, client)
+    order — the sync loop's launch order, so the degenerate async loss
+    mean is bit-identical to sync's.  Shared by the in-process driver and
+    the socket fleet's async record path."""
+    return [l for g in sorted(pending) for k in sorted(pending[g])
+            for l in pending[g][k]]
+
+
+def make_gen_server(fed: FedConfig, adapters, client_rank_list,
+                    n_cohort: int) -> GenServer:
+    """GenServer configured from FedConfig — the one place the generation
+    fill-target default (half the cohort, clamped to the cohort size) and
+    the policy/aggregator wiring live, shared by the in-process async
+    driver below and the socket fleet (launch/fleet.serve_async) so the
+    two protocol drivers cannot drift."""
+    K = min(fed.buffer_size or max(1, n_cohort // 2), n_cohort)
+    return GenServer(fed.method, adapters, gen_size=K,
+                     staleness_alpha=fed.staleness_alpha,
+                     server_lr=fed.server_lr,
+                     stale_policy=fed.gen_stale_policy,
+                     r_G=adapter_rank(fed),
+                     client_rank_list=client_rank_list,
+                     hetlora_gamma=fed.hetlora_gamma)
+
+
 def _run_async(ctx: _Ctx, adapters, history, test_ds, evaluate):
-    """Event-driven FedBuff loop: a persistent cohort of clients trains
-    continuously; the server aggregates every buffer_size arrivals.  One
-    'round' in history = one global version (buffer flush).  Each launch is
-    a cohort of one through ctx.executor (clients start from different
-    global versions, so there is no shared start state to batch)."""
+    """Event-driven generation launch/harvest loop.
+
+    Every broadcast is stamped with a generation id (the server's version);
+    a launch joins the *open* generation and trains from its origin state.
+    One 'round' in history = one generation flush (version bump).
+
+    Launch phase: all clients ready to join the new generation launch
+    together as ONE cohort through ctx.executor — they share the decoded
+    broadcast state, so the vectorized backend compiles the whole batch
+    into its cohort program exactly as on the sync path (no more singleton
+    degeneration).  Launches are ordered by client id, so the shared
+    rng/DP streams are consumed in the sync launch order.
+
+    Harvest phase: arrivals pop in simulated-time order.  An upload for the
+    open generation buffers (flushing it when the fill target is reached —
+    GenServer runs the full cohort aggregator, flexlora/hetlora included);
+    an upload for a closed generation follows ``fed.gen_stale_policy``.  A
+    client that contributed to the open generation *waits* for the flush
+    before relaunching (one upload per client per generation); a stale or
+    dropped client rejoins the open generation immediately.
+
+    With generation size == cohort size, zero staleness, and the fp32
+    codec this loop is bit-for-bit the sync loop: same broadcasts, same
+    cohort batching, same aggregation order, same clock
+    (tests/test_async_cohort.py asserts it for all five methods on both
+    executors)."""
     fed = ctx.fed
     participants = _sample_participants(ctx.rng, fed)
-    K = fed.buffer_size or max(1, len(participants) // 2)
-    server = BuffServer(fed.method, adapters, buffer_size=K,
-                        staleness_alpha=fed.staleness_alpha,
-                        server_lr=fed.server_lr)
-    heap, seq = [], 0
-    pending_losses = []
+    server = make_gen_server(fed, adapters, ctx.client_rank_list,
+                             len(participants))
+    K = server.gen_size
+    # the Broadcaster caches dense payloads per generation (global version)
+    # and, under 'delta', tracks each client's last-fetched state
+    bcaster = Broadcaster(fed.downlink_codec)
+    heap, seq, n_launched = [], 0, 0
     launches = {k: 0 for k in participants}
-    # with lossy uplinks the server version may never advance; a launch
-    # budget (generous vs the ~rounds*K + cohort launches of a clean run)
+    pending_losses = {}       # gen -> {client -> [losses]}
+    waiting = []              # (t_ready, k) contributors awaiting the flush
+    gen_open_at = 0.0         # sim time the open generation opened
+    # with lossy uplinks the version may never advance; a launch budget
+    # (generous vs the ~rounds*K + cohort launches of a clean run)
     # guarantees termination instead of relaunching dropped clients forever
     launch_budget = (fed.rounds * K + len(participants)) * 8
-    # the Broadcaster caches dense payloads per buffer generation (global
-    # version) and, under 'delta', tracks each client's last-fetched state
-    bcaster = Broadcaster(fed.downlink_codec)
 
-    def launch(k, now):
-        nonlocal seq
-        # async has no global rounds, so the alternating freeze is paced by
-        # each client's own launch count — both halves still train equally
-        # often even when clients straddle buffer flushes
-        launches[k] += 1
-        parity = _round_parity(fed, launches[k])
-        bcast, global_at_client = bcaster.payload_for(k, server.adapters,
-                                                      server.version)
-        down = ctx.net.downlink(k, bcast, now=now)
-        history["downloaded_cum"] += len(bcast)
-        res = _client_update(ctx, global_at_client, k, parity,
-                             _enc_seed(fed, server.version + 1, k))
-        t_done = down.arrived_at + \
-            ctx.net.compute_time(k, res.n_steps, fed.step_time_s)
-        up = ctx.net.uplink(k, res.payload, now=t_done)
-        history["uploaded_cum"] += len(res.payload)
-        t_arr = up.arrived_at if not up.dropped else t_done
-        heapq.heappush(heap, (t_arr, seq, k, res, server.version, parity,
-                              up.dropped))
-        seq += 1
-
-    for k in participants:
-        launch(k, 0.0)
+    def launch_cohort(ready):
+        """Launch every (t_ready, k) into the open generation as one cohort
+        (client-id order — the deterministic launch order the shared rng
+        and DP key streams are consumed in)."""
+        nonlocal seq, n_launched
+        entries, infos = [], []
+        for t_ready, k in sorted(ready, key=lambda x: x[1]):
+            # async has no global rounds, so the alternating freeze is
+            # paced by each client's own launch count — both halves still
+            # train equally often even when clients straddle generations
+            launches[k] += 1
+            parity = _round_parity(fed, launches[k])
+            gen = server.begin(k)
+            bcast, global_at_client = bcaster.payload_for(
+                k, server.broadcast_state, gen)
+            down = ctx.net.downlink(k, bcast, now=max(t_ready, gen_open_at))
+            history["downloaded_cum"] += len(bcast)
+            entries.append(executors.CohortEntry(
+                k, global_at_client, parity, _enc_seed(fed, gen + 1, k)))
+            infos.append((k, gen, parity, down.arrived_at))
+            n_launched += 1
+        results = _run_cohort(ctx, entries)
+        for res, (k, gen, parity, d_arr) in zip(results, infos):
+            t_done = d_arr + ctx.net.compute_time(k, res.n_steps,
+                                                  fed.step_time_s)
+            up = ctx.net.uplink(k, res.payload, now=t_done)
+            history["uploaded_cum"] += len(res.payload)
+            t_arr = up.arrived_at if not up.dropped else t_done
+            heapq.heappush(heap, (t_arr, seq, k, res, gen, parity,
+                                  up.dropped))
+            seq += 1
 
     def record(version, now):
         acc = evaluate(ctx.params, server.adapters, test_ds) \
             if evaluate else float("nan")
+        losses = _ordered_losses(pending_losses)
         history["round"].append(version)
         history["acc"].append(acc)
-        history["loss"].append(float(np.mean(pending_losses))
-                               if pending_losses else float("nan"))
+        history["loss"].append(float(np.mean(losses)) if losses
+                               else float("nan"))
         history["uploaded"].append(history["uploaded_cum"])
         history["downloaded"].append(history["downloaded_cum"])
         history["sim_time"].append(now)
         pending_losses.clear()
 
+    launch_cohort([(0.0, k) for k in participants])
     while heap and server.version < fed.rounds:
-        t_arr, _, k, res, v0, parity, dropped = heapq.heappop(heap)
-        pending_losses.extend(res.losses)
-        if not dropped:
+        t_arr, _, k, res, gen, parity, dropped = heapq.heappop(heap)
+        pending_losses.setdefault(gen, {}).setdefault(k, []) \
+            .extend(res.losses)
+        if dropped:
+            server.record_drop(gen, k)
+            flushed = False
+        else:
             flushed = server.receive(
-                ClientUpdate(k, res.payload, ctx.weights[k], v0, parity,
+                ClientUpdate(k, res.payload, ctx.weights[k], gen, parity,
                              arrived_at=t_arr))
-            if flushed and (server.version % fed.eval_every == 0
-                            or server.version == fed.rounds):
+        relaunch = n_launched < launch_budget and server.version < fed.rounds
+        if flushed:
+            gen_open_at = t_arr
+            if server.version % fed.eval_every == 0 \
+                    or server.version == fed.rounds:
                 record(server.version, t_arr)
-        if server.version < fed.rounds and seq < launch_budget:
-            launch(k, t_arr)
+            if relaunch:
+                waiting.append((t_arr, k))
+                launch_cohort(waiting)
+                waiting = []
+        elif relaunch:
+            if gen < server.version or dropped:
+                # its generation is closed (stale) or the upload was lost:
+                # rejoin the open generation immediately
+                launch_cohort([(t_arr, k)])
+            else:
+                # already contributed to the open generation — wait for
+                # the flush that opens the next one
+                waiting.append((t_arr, k))
 
+    # drain: the open generation may be left partial (drops / exhausted
+    # launch budget) — close it per the stale/partial policy
+    if server.version < fed.rounds:
+        server.finalize()
     if not history["round"] or history["round"][-1] != server.version:
         record(server.version, history["sim_time"][-1]
-               if history["sim_time"] else 0.0)
+               if history["sim_time"] else gen_open_at)
     history["staleness"] = list(server.staleness_log)
     history["adapters"] = server.adapters
 

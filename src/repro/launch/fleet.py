@@ -1,11 +1,12 @@
 """Multi-process federation: N OS client processes + a socket server.
 
-``launch_fleet`` is the real-transport twin of the in-process sync engine
-(``core/federation.run_federated``): the parent process owns the
-``SyncServer`` + ``Broadcaster`` behind a ``ServerTransport`` (TCP or
-Unix-domain socket), and each client runs in its own spawned process —
-fetching the broadcast, training its shard locally, and uploading the
-codec payload over the real socket.
+``launch_fleet`` is the real-transport twin of the in-process engine
+(``core/federation.run_federated``): the parent process owns the server
+(``SyncServer`` for ``server_mode='sync'``, the generation-versioned
+``GenServer`` for ``'async'``) + ``Broadcaster`` behind a
+``ServerTransport`` (TCP or Unix-domain socket), and each client runs in
+its own spawned process — fetching the broadcast, training its shard
+locally, and uploading the codec payload over the real socket.
 
 Bit-for-bit parity with the in-process engine (fp32 codec) comes from two
 invariants:
@@ -83,12 +84,12 @@ class DataSpec:
 
 
 def check_fleet_config(fed) -> None:
-    """The multi-process driver covers the sync adapter track.  Everything
-    else either needs the simulated clock (async) or shares rng state the
-    replay scheme does not model (partial participation)."""
-    if fed.server_mode != "sync":
-        raise ValueError("launch_fleet is the sync engine's twin; use the "
-                         "simulated transport for async runs")
+    """The multi-process driver covers the adapter track, sync (bit-for-bit
+    the in-process trajectory) and async (the generation protocol; arrival
+    order is wall-clock, so no bit-parity claim).  full_ft and partial
+    participation share state the replay scheme does not model."""
+    if fed.server_mode not in ("sync", "async"):
+        raise ValueError(f"unknown server_mode {fed.server_mode!r}")
     if fed.method == "full_ft":
         raise ValueError("full_ft is not supported multi-process (dense "
                          "base-param uploads; use run_federated)")
@@ -116,6 +117,9 @@ def serve(cfg, fed, train_ds, test_ds, client_indices,
     the same history dict shape as run_federated (sim_time is wall-clock
     seconds here; ``history['traffic']`` carries the transport tally)."""
     check_fleet_config(fed)
+    if fed.server_mode != "sync":
+        raise ValueError("serve drives the round-synchronous protocol; "
+                         "use serve_async for the generation protocol")
     ctx, adapters = federation.build_session(cfg, fed, train_ds,
                                              client_indices, transport)
     evaluate = federation.make_eval(
@@ -284,6 +288,198 @@ def run_client(client_id: int, spec: DataSpec, fed, address: str,
 
 
 # ---------------------------------------------------------------------------
+# async: the generation protocol over real sockets
+# ---------------------------------------------------------------------------
+
+
+def serve_async(cfg, fed, train_ds, test_ds, client_indices,
+                transport: xport.ServerTransport):
+    """Drive the generation-versioned async cohort protocol
+    (comm/server.GenServer) over an already-listening ServerTransport.
+
+    Wire mapping: a BCAST's version field is the generation id the fetching
+    client joins; the client echoes it on META/UPLOAD, which routes the
+    upload into the right generation buffer.  A client that already
+    contributed to the open generation has its FETCH *held* until the next
+    generation opens (one upload per client per generation — the socket
+    twin of the in-process driver's wait-for-flush); a stale client's
+    FETCH is answered immediately.  A disconnect mid-generation is a
+    recorded drop: the generation's accounting stays balanced and, if the
+    open generation can no longer fill (nothing in flight, every live
+    client held), it closes per ``fed.gen_stale_policy`` so the run
+    proceeds — the generation twin of the sync driver's survivor rounds.
+
+    Arrival order is real wall-clock here, so unlike the sync fleet there
+    is no bit-parity claim against the in-process engine; the invariants
+    are protocol-level (version advances, accounting balances, traffic
+    tallies agree with history) and are what CI's async smoke asserts."""
+    check_fleet_config(fed)
+    if fed.server_mode != "async":
+        raise ValueError("serve_async drives the generation protocol; "
+                         "use serve for sync runs")
+    ctx, adapters = federation.build_session(cfg, fed, train_ds,
+                                             client_indices, transport)
+    evaluate = federation.make_eval(
+        cfg, lora.lora_scale(federation.adapter_rank(fed))) \
+        if cfg.is_encoder else None
+    server = federation.make_gen_server(fed, adapters, ctx.client_rank_list,
+                                        fed.n_clients)
+    bcaster = Broadcaster(fed.downlink_codec)
+    history = {"round": [], "acc": [], "loss": [], "uploaded": [],
+               "downloaded": [], "uploaded_cum": 0.0, "downloaded_cum": 0.0,
+               "sim_time": [], "mask_overlap": [], "update_cosine": []}
+    t0 = time.monotonic()
+    transport.accept_clients(fed.n_clients)
+    inflight = {}           # client -> generation it is training for
+    held = []               # fetches waiting for the next generation
+    pending_losses = {}     # generation -> {client -> [losses]}
+
+    def answer_fetch(cid):
+        gen = server.begin(cid)
+        payload, _ = bcaster.payload_for(cid, server.broadcast_state, gen)
+        if transport.send(cid, xport.KIND_BCAST, gen, payload):
+            history["downloaded_cum"] += len(payload)
+            inflight[cid] = gen
+        else:
+            server.record_drop(gen, cid)
+
+    def record(version):
+        acc = evaluate(ctx.params, server.adapters, test_ds) \
+            if evaluate else float("nan")
+        losses = federation._ordered_losses(pending_losses)
+        history["round"].append(version)
+        history["acc"].append(acc)
+        history["loss"].append(float(np.mean(losses)) if losses
+                               else float("nan"))
+        history["uploaded"].append(history["uploaded_cum"])
+        history["downloaded"].append(history["downloaded_cum"])
+        history["sim_time"].append(time.monotonic() - t0)
+        pending_losses.clear()
+
+    def release_held():
+        """The next generation opened: answer every held fetch — unless
+        the run is over, in which case the held clients get DONE from the
+        main-loop exit instead of a throwaway generation they would train
+        for nothing."""
+        if server.version >= fed.rounds:
+            return
+        for cid in list(held):
+            held.remove(cid)
+            answer_fetch(cid)
+
+    def unstall():
+        """Close the open generation if it can no longer fill."""
+        live = set(transport.clients)
+        if inflight or not live or not live.issubset(set(held)):
+            return
+        aggregated = server.close_partial()
+        if aggregated and (server.version % fed.eval_every == 0
+                           or server.version == fed.rounds):
+            record(server.version)
+        release_held()
+
+    while server.version < fed.rounds and transport.clients:
+        cid, fr = transport.recv()
+        if fr is None:                       # disconnect — a recorded drop
+            gen = inflight.pop(cid, None)
+            if gen is not None:
+                server.record_drop(gen, cid)
+            if cid in held:
+                held.remove(cid)
+            unstall()
+        elif fr.kind == xport.KIND_FETCH:
+            if cid in inflight:
+                # a refetch without an upload: the outstanding launch is lost
+                server.record_drop(inflight.pop(cid), cid)
+            if server.in_current(cid):
+                held.append(cid)             # wait for the next generation
+                unstall()
+            else:
+                answer_fetch(cid)
+        elif fr.kind == xport.KIND_META:
+            meta = json.loads(fr.payload.decode())
+            pending_losses.setdefault(fr.version, {})[cid] = \
+                meta.get("losses", [])
+        elif fr.kind == xport.KIND_UPLOAD:
+            inflight.pop(cid, None)
+            history["uploaded_cum"] += len(fr.payload)
+            flushed = server.receive(
+                ClientUpdate(cid, fr.payload, ctx.weights[cid], fr.version,
+                             2, arrived_at=time.monotonic() - t0))
+            if flushed:
+                if server.version % fed.eval_every == 0 \
+                        or server.version == fed.rounds:
+                    record(server.version)
+                release_held()
+            else:
+                unstall()
+
+    if server.version < fed.rounds:
+        # early termination (every client gone): apply the partial-close
+        # policy to whatever the open generation had buffered, exactly
+        # like the in-process driver's drain
+        server.finalize()
+    for cid in transport.clients:
+        transport.send(cid, xport.KIND_DONE, server.version)
+    # let in-flight stragglers finish cleanly (their uploads are ignored;
+    # their next FETCH finds the DONE already queued on their socket)
+    while transport.clients:
+        try:
+            cid, fr = transport.recv(timeout=10.0)
+        except TimeoutError:
+            break
+        if fr is not None and fr.kind == xport.KIND_UPLOAD:
+            # a straggler's stale upload — ignored by the closed run, but
+            # the bytes travelled, so the history tally must agree with
+            # the transport's
+            history["uploaded_cum"] += len(fr.payload)
+        if fr is not None and fr.kind == xport.KIND_FETCH:
+            transport.send(cid, xport.KIND_DONE, server.version)
+    if not history["round"] or history["round"][-1] != server.version:
+        record(server.version)
+    history["staleness"] = list(server.staleness_log)
+    history["gen_stats"] = dict(server.stats)
+    history["adapters"] = server.adapters
+    history["params"] = ctx.params
+    history["traffic"] = transport.traffic()
+    return history
+
+
+def run_client_async(client_id: int, spec: DataSpec, fed, address: str,
+                     timeout: float = 120.0):
+    """One async client process: fetch the open generation's broadcast,
+    train from it, upload tagged with the generation id, repeat until DONE.
+    The server paces the loop — a fetch inside a generation this client
+    already fed is held until the generation flushes."""
+    check_fleet_config(fed)
+    cfg, train, _test, parts = spec.build(fed.n_clients)
+    ctx, _ = federation.build_session(cfg, fed, train, parts, None)
+    state, n_launch = None, 0
+    with xport.ClientTransport(address, client_id, timeout=timeout) as ct:
+        while True:
+            fr = ct.fetch(n_launch)
+            if fr is None or fr.kind == xport.KIND_DONE:
+                break
+            gen = fr.version
+            if fed.downlink_codec == "delta" and state is not None:
+                state = codec.apply_update(state, fr.payload)
+            else:
+                state = codec.decode(fr.payload)
+            n_launch += 1
+            parity = federation._round_parity(fed, n_launch)
+            res = federation._client_update(
+                ctx, state, client_id, parity,
+                federation._enc_seed(fed, gen + 1, client_id))
+            try:
+                ct.upload(res.payload, gen,
+                          meta={"client": client_id, "parity": parity,
+                                "n_steps": res.n_steps,
+                                "losses": res.losses})
+            except (BrokenPipeError, ConnectionResetError, OSError):
+                break                        # the run ended under us
+
+
+# ---------------------------------------------------------------------------
 # the fleet launcher
 # ---------------------------------------------------------------------------
 
@@ -301,15 +497,19 @@ def launch_fleet(spec: DataSpec, fed, *, transport: str = "uds",
                  address: str | None = None, timeout: float = 120.0):
     """Fork fed.n_clients client processes (spawn — each re-imports jax
     cleanly) and serve them from this process.  Returns the server history.
+    ``fed.server_mode`` picks the protocol: 'sync' (bit-for-bit the
+    in-process trajectory) or 'async' (the generation protocol).
 
     ``timeout`` bounds every socket wait on both sides: a hung client makes
     the server raise TimeoutError instead of eating the CI job budget."""
     check_fleet_config(fed)
     if address is None:
         address = default_address(transport)
+    serve_fn, client_fn = (serve, run_client) if fed.server_mode == "sync" \
+        else (serve_async, run_client_async)
     mp = multiprocessing.get_context("spawn")
     st = xport.ServerTransport(address, timeout=timeout)
-    procs = [mp.Process(target=run_client,
+    procs = [mp.Process(target=client_fn,
                         args=(k, spec, fed, st.address, timeout),
                         daemon=True)
              for k in range(fed.n_clients)]
@@ -317,7 +517,7 @@ def launch_fleet(spec: DataSpec, fed, *, transport: str = "uds",
         for p in procs:
             p.start()
         cfg, train, test, parts = spec.build(fed.n_clients)
-        history = serve(cfg, fed, train, test, parts, st)
+        history = serve_fn(cfg, fed, train, test, parts, st)
         for p in procs:
             p.join(timeout=timeout)
         return history

@@ -1,0 +1,317 @@
+"""Differential test harness for generation-versioned async aggregation.
+
+The headline gate: in the degenerate configuration — generation size ==
+cohort size, ideal network (zero staleness), fp32 codec — the async
+generation path (comm/server.GenServer + core/federation._run_async) must
+reproduce the sync trajectory **bit-for-bit** for all five adapter methods
+on both executors: same eval/loss histories, same uploaded/downloaded byte
+series, same simulated clock, bit-identical final adapters, and an
+all-zero staleness log.  This mirrors tests/test_executors.py's parity
+matrix; the fast subset (one cohort method per executor) runs in the CI
+default suite, the full method × executor matrix is @slow.
+
+Below that: GenServer unit coverage (full-flush ≡ SyncServer by
+construction, stale merge/drop policies, partial generations, duplicate
+rejection) and in-process chaos — mid-generation upload drops must leave
+the buffer consistent and the byte accounting balanced.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.comm import codec, network, server
+from repro.comm.server import ClientUpdate, GenServer, SyncServer
+from repro.configs.base import get_config
+from repro.core import aggregate, selection
+from repro.core.federation import FedConfig, run_federated
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_classification
+from repro.utils import tree_add, tree_scale, tree_sub
+
+CFG = get_config("roberta-sim")
+
+METHODS = ["fl_lora", "ffa_lora", "flexlora", "hetlora", "lora_a2"]
+
+
+@pytest.fixture(scope="module")
+def data():
+    train, test = make_classification(0, n_classes=8, vocab=CFG.vocab_size,
+                                      seq_len=16, n_train=480, n_test=160)
+    parts = dirichlet_partition(0, train.labels, 4, alpha=0.5)
+    return train, test, parts
+
+
+def _fed(method, executor, **kw):
+    base = dict(method=method, rank=2, global_rank=4, rounds=2,
+                local_epochs=1, batch_size=32, n_clients=4, eval_every=1,
+                seed=0, executor=executor)
+    if method == "hetlora":
+        base["client_ranks"] = [1, 2, 2, 4]
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _degenerate_pair(data, method, executor, **kw):
+    """Sync run vs async run with generation size == cohort size."""
+    train, test, parts = data
+    h_sync = run_federated(CFG, _fed(method, executor, **kw),
+                           train, test, parts)
+    h_async = run_federated(CFG, _fed(method, executor, server_mode="async",
+                                      buffer_size=4, **kw),
+                            train, test, parts)
+    return h_sync, h_async
+
+
+def _assert_bit_identical(h_sync, h_async):
+    assert h_sync["round"] == h_async["round"]
+    assert h_sync["acc"] == h_async["acc"]
+    assert h_sync["loss"] == h_async["loss"]
+    assert h_sync["uploaded"] == h_async["uploaded"]
+    assert h_sync["downloaded"] == h_async["downloaded"]
+    assert h_sync["sim_time"] == h_async["sim_time"]
+    for x, y in zip(jax.tree.leaves(h_sync["adapters"]),
+                    jax.tree.leaves(h_async["adapters"])):
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+    # degenerate means *zero* staleness — every upload was on time
+    assert all(s == 0 for s in h_async["staleness"])
+
+
+# ---------------------------------------------------------------------------
+# differential trajectory tests (fast subset; full matrix @slow)
+# ---------------------------------------------------------------------------
+
+
+def test_flexlora_vectorized_async_is_sync_bit_for_bit(data):
+    """The newly-unlocked capability on the hot path: flexlora's product
+    SVD aggregation per cohort generation, launches batched through the
+    vectorized cohort program, bit-for-bit the sync trajectory."""
+    _assert_bit_identical(*_degenerate_pair(data, "flexlora", "vectorized"))
+
+
+def test_hetlora_looped_async_is_sync_bit_for_bit(data):
+    """Heterogeneous ranks + the rank-weighted sparsity decay, applied by
+    the generation flush exactly as the sync round applies it."""
+    _assert_bit_identical(*_degenerate_pair(data, "hetlora", "looped"))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("executor", ["looped", "vectorized"])
+@pytest.mark.parametrize("method", METHODS)
+def test_async_degenerate_matrix(method, executor, data):
+    """The full method × executor matrix of the differential harness."""
+    _assert_bit_identical(*_degenerate_pair(data, method, executor))
+
+
+# ---------------------------------------------------------------------------
+# GenServer unit layer
+# ---------------------------------------------------------------------------
+
+
+def _tiny_adapters(seed, r=4, din=6, dout=5):
+    rng = np.random.default_rng(seed)
+    return {"blocks": {
+        "0": {"q": {"a": rng.normal(size=(din, r)).astype(np.float32),
+                    "b": rng.normal(size=(r, dout)).astype(np.float32)}},
+        "1": {"v": {"a": rng.normal(size=(din, r)).astype(np.float32),
+                    "b": rng.normal(size=(r, dout)).astype(np.float32)}}}}
+
+
+def _upload(origin, seed, cid, gen, weight=1.0):
+    delta = tree_sub(_tiny_adapters(seed), origin)
+    payload = codec.encode(delta, selection.masks_like(origin), 2)
+    return ClientUpdate(cid, payload, weight, gen, 2)
+
+
+def _gen_server(method="fl_lora", gen_size=2, **kw):
+    base = dict(r_G=4, client_rank_list=[1, 2, 2, 4, 4, 4],
+                hetlora_gamma=0.9)
+    base.update(kw)
+    return GenServer(method, _tiny_adapters(0), gen_size=gen_size, **base)
+
+
+def _trees_equal(a, b):
+    return all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_full_generation_flush_matches_sync_server(method):
+    """A full on-time generation aggregates through the exact SyncServer
+    code path (shared aggregate_cohort), regardless of arrival order —
+    updates sort by client id, the sync launch order."""
+    g0 = _tiny_adapters(0)
+    srv = _gen_server(method, gen_size=3)
+    ups = [_upload(g0, 10 + c, c, 0, weight=0.2 + 0.1 * c) for c in (2, 0, 1)]
+    for c in (2, 0, 1):
+        srv.begin(c)
+    flushed = [srv.receive(u) for u in ups]
+    assert flushed == [False, False, True]
+    assert srv.version == 1
+
+    ref = SyncServer(method, g0, r_G=4, client_rank_list=[1, 2, 2, 4],
+                     hetlora_gamma=0.9)
+    ref.aggregate_round(sorted(ups, key=lambda u: u.client_id))
+    assert _trees_equal(srv.adapters, ref.adapters)
+
+
+def test_hetlora_decay_applies_exactly_once_per_generation():
+    """Regression guard on the sparsity decay: one generation flush decays
+    the tail exactly like one direct aggregate.hetlora call — not twice,
+    not per upload."""
+    g0 = _tiny_adapters(0)
+    srv = _gen_server("hetlora", gen_size=2)
+    ups = [_upload(g0, 20 + c, c, 0) for c in (0, 1)]
+    for c in (0, 1):
+        srv.begin(c)
+    for u in ups:
+        srv.receive(u)
+    deltas = [codec.decode(u.payload) for u in ups]
+    want = aggregate.hetlora(g0, deltas, [0.5, 0.5], [1, 2], 0.9)
+    assert _trees_equal(srv.adapters, want)
+
+
+def test_stale_merge_applies_discounted_correction():
+    """A straggler's upload for a flushed generation folds in as
+    β·(agg(origin, stale) − origin) with β = server_lr·(1+τ)^(−α), once
+    the generation has nothing left in flight."""
+    g0 = _tiny_adapters(0)
+    srv = _gen_server("fl_lora", gen_size=2, staleness_alpha=0.5,
+                      server_lr=0.5)
+    for c in (0, 1, 2):
+        srv.begin(c)
+    srv.receive(_upload(g0, 30, 0, 0))
+    assert srv.receive(_upload(g0, 31, 1, 0))       # flush -> version 1
+    flushed = srv.adapters
+    stale = _upload(g0, 32, 2, 0)
+    assert not srv.receive(stale)                   # tau = 1, merges
+    agg, _ = server.aggregate_cohort("fl_lora", g0, [stale])
+    beta = 0.5 * (1.0 + 1) ** -0.5
+    want = tree_add(flushed, tree_scale(tree_sub(agg, g0), beta))
+    assert _trees_equal(srv.adapters, want)
+    assert srv.staleness_log == [0, 0, 1]
+    assert srv.stats["stale_merged"] == 1 and srv.stats["merged_updates"] == 1
+    assert srv.pending() == {}                      # fully accounted
+
+
+def test_stale_drop_policy_discards_and_stays_balanced():
+    g0 = _tiny_adapters(0)
+    srv = _gen_server("flexlora", gen_size=2, stale_policy="drop")
+    for c in (0, 1, 2):
+        srv.begin(c)
+    srv.receive(_upload(g0, 40, 0, 0))
+    srv.receive(_upload(g0, 41, 1, 0))
+    flushed = srv.adapters
+    assert not srv.receive(_upload(g0, 42, 2, 0))
+    assert _trees_equal(srv.adapters, flushed)      # dropped, not merged
+    assert srv.stats["stale_dropped"] == 1
+    assert srv.pending() == {}
+
+
+def test_duplicate_upload_for_stale_generation_is_rejected():
+    """Chaos: a duplicate upload — same client, same (stale) generation —
+    must be rejected without touching the buffer or the accounting."""
+    g0 = _tiny_adapters(0)
+    srv = _gen_server("hetlora", gen_size=2)
+    for c in (0, 1, 2):
+        srv.begin(c)
+    srv.receive(_upload(g0, 50, 0, 0))
+    srv.receive(_upload(g0, 51, 1, 0))              # flush
+    dup_on_time = _upload(g0, 52, 0, 0)             # client 0 again, gen 0
+    assert not srv.receive(dup_on_time)
+    assert srv.stats["duplicates"] == 1
+    stale = _upload(g0, 53, 2, 0)
+    srv.receive(stale)                              # closes generation 0
+    after_merge = srv.adapters
+    assert not srv.receive(stale)                   # replay of a merged gen
+    assert srv.stats["duplicates"] == 2
+    assert _trees_equal(srv.adapters, after_merge)  # replay changed nothing
+    srv.begin(0)                                    # normal ops resume
+    assert srv.receive(_upload(g0, 54, 0, 1)) is False
+    assert srv.pending()[1]["buffered"] == 1
+
+
+def test_record_drop_closes_stale_generation():
+    """A dropped straggler settles its generation's accounting: the merge
+    of whatever did arrive fires when the last in-flight launch resolves."""
+    g0 = _tiny_adapters(0)
+    srv = _gen_server("fl_lora", gen_size=2)
+    for c in (0, 1, 2, 3):
+        srv.begin(c)
+    srv.receive(_upload(g0, 60, 0, 0))
+    srv.receive(_upload(g0, 61, 1, 0))              # flush; 2 & 3 in flight
+    srv.receive(_upload(g0, 62, 2, 0))              # stale, buffered
+    assert srv.pending()[0]["outstanding"] == 1
+    srv.record_drop(0, 3)                           # last in-flight resolves
+    assert srv.stats["stale_merged"] == 1
+    assert srv.pending() == {}
+
+
+def test_partial_generation_policies():
+    g0 = _tiny_adapters(0)
+    for policy, aggregated in (("merge", True), ("drop", False)):
+        srv = _gen_server("flexlora", gen_size=3, stale_policy=policy)
+        srv.begin(0)
+        srv.receive(_upload(g0, 70, 0, 0))
+        assert srv.version == 0
+        assert srv.close_partial() is aggregated
+        assert srv.version == 1                     # liveness: version turns
+        changed = not _trees_equal(srv.adapters, g0)
+        assert changed is aggregated
+    # an empty open generation has nothing to close
+    srv = _gen_server("flexlora", gen_size=3)
+    assert not srv.close_partial() and srv.version == 0
+
+
+def test_gen_server_accepts_all_methods_buff_server_does_not():
+    """The async-methods restriction is lifted for the generation protocol
+    and retained (with a pointer here) by the FedBuff buffer."""
+    g0 = _tiny_adapters(0)
+    for method in METHODS:
+        GenServer(method, g0, gen_size=2, r_G=4, client_rank_list=[2, 2])
+    with pytest.raises(ValueError, match="generation protocol"):
+        server.BuffServer("flexlora", g0, buffer_size=2)
+    with pytest.raises(ValueError, match="unknown async method"):
+        GenServer("full_ft", g0, gen_size=2)
+    with pytest.raises(ValueError, match="stale policy"):
+        GenServer("fl_lora", g0, gen_size=2, stale_policy="retry")
+
+
+# ---------------------------------------------------------------------------
+# in-process chaos: drops mid-generation
+# ---------------------------------------------------------------------------
+
+
+def test_mid_generation_drop_keeps_buffer_consistent(data):
+    """Half the uplinks are lost mid-generation; the run must still reach
+    the target version with balanced byte accounting (every transmitted
+    byte counted, dropped or not) and finite adapters."""
+    train, test, parts = data
+    drops = network.SimulatedNetwork(
+        [network.LinkModel(drop_prob=0.5) for _ in range(4)], seed=3)
+    fed = _fed("flexlora", "looped", server_mode="async", rounds=3,
+               buffer_size=2, network=drops)
+    h = run_federated(CFG, fed, train, test, parts)
+    assert h["round"][-1] == 3
+    assert all(np.isfinite(a) for a in h["acc"])
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(h["adapters"]))
+    assert drops.traffic()["total_up"] == h["uploaded_cum"]
+    assert drops.traffic()["total_down"] == h["downloaded_cum"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", ["merge", "drop"])
+def test_stragglers_induce_staleness_and_run_completes(policy, data):
+    """Non-degenerate protocol exercise: a straggler fleet with small
+    generations produces genuinely stale uploads under both policies."""
+    train, test, parts = data
+    fleet = network.heterogeneous_fleet(4, seed=0, straggler_frac=0.25,
+                                        slow_factor=8.0)
+    fed = _fed("hetlora", "vectorized", server_mode="async", rounds=4,
+               buffer_size=2, network=fleet, gen_stale_policy=policy)
+    h = run_federated(CFG, fed, train, test, parts)
+    assert h["round"][-1] == 4
+    assert max(h["staleness"]) >= 1
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(h["adapters"]))
+    assert fleet.traffic()["total_up"] == h["uploaded_cum"]

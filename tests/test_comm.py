@@ -328,10 +328,15 @@ def test_buff_server_flushes_at_buffer_size_with_staleness_discount():
     assert srv.staleness_log == [0, 0, 1, 0]
 
 
-def test_async_rejects_cohort_methods():
+def test_buff_server_still_rejects_cohort_methods():
+    """The FedBuff buffer stays delta-additive; cohort methods go async
+    through the generation protocol (GenServer, tests/test_async_cohort.py)
+    and the error message points there."""
     g = _adapters(0)
-    with pytest.raises(ValueError):
+    with pytest.raises(ValueError, match="generation protocol"):
         server.BuffServer("flexlora", g, buffer_size=2)
+    assert server.ASYNC_METHODS == ("fl_lora", "ffa_lora", "flexlora",
+                                    "hetlora", "lora_a2")
 
 
 # ---------------------------------------------------------------------------
@@ -368,18 +373,18 @@ def test_lossy_codecs_run_and_upload_less(data):
 
 @pytest.mark.slow
 def test_async_reaches_sync_accuracy(data):
-    """Acceptance: the async buffered server reaches within 2 accuracy
-    points of sync on the same reduced config.  The cohort is homogeneous
-    and the network ideal, so pipelining staleness (clients relaunching
-    before a flush) carries no signal — staleness_alpha=0 keeps the
-    effective step size comparable to sync."""
+    """Acceptance: the async generation server reaches within 2 accuracy
+    points of sync on the same reduced config.  Half-cohort generations
+    (buffer_size=2 of 4 clients) make the tail of every generation arrive
+    stale; staleness_alpha=0 keeps the merged corrections' effective step
+    size comparable to sync."""
     train, test, parts = data
     cfg = dict(rounds=16, local_epochs=2, eval_every=4)
     hs = run_federated(CFG, _fed(**cfg), train, test, parts)
-    ha = run_federated(CFG, _fed(server_mode="async", buffer_size=4,
+    ha = run_federated(CFG, _fed(server_mode="async", buffer_size=2,
                                  staleness_alpha=0.0, **cfg),
                        train, test, parts)
-    assert max(ha["staleness"]) >= 1        # async pipelining is exercised
+    assert max(ha["staleness"]) >= 1        # stale generations exercised
     assert abs(ha["acc"][-1] - hs["acc"][-1]) <= 0.02  # within 2 points
 
 

@@ -105,6 +105,127 @@ def test_linear_attention_chunk_invariance(seed, chunk, icd):
     np.testing.assert_allclose(np.asarray(S), np.asarray(S0), atol=1e-4)
 
 
+# ---------------------------------------------------------------------------
+# generation-versioned async cohort aggregation (comm/server.GenServer)
+# ---------------------------------------------------------------------------
+
+
+def _gen_tree(rng, r, din=5, dout=4):
+    return {"g": {"0": {"q": {
+        "a": rng.normal(size=(din, r)).astype(np.float32),
+        "b": rng.normal(size=(r, dout)).astype(np.float32)}}}}
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4),
+       st.integers(0, 999))
+@settings(max_examples=20, deadline=None)
+def test_hetlora_decay_applies_exactly_once_per_generation(
+        gen_size, n_gens, r, seed):
+    """With zero deltas, G full generations must shrink the adapters by
+    exactly decay**G, where decay_j = gamma^(Σ_k w_k·1[r_k <= j]) — the
+    closed form of ONE aggregate.hetlora application per generation."""
+    from repro.comm import codec
+    from repro.comm.server import ClientUpdate, GenServer
+    from repro.core import selection
+    rng = np.random.default_rng(seed)
+    adapters = _gen_tree(rng, r)
+    ranks = rng.integers(1, r + 1, size=gen_size)
+    weights = rng.uniform(0.5, 2.0, size=gen_size)
+    zero = codec.encode(
+        jax.tree.map(np.zeros_like, adapters),
+        selection.masks_like(adapters), 2)
+    srv = GenServer("hetlora", adapters, gen_size=gen_size,
+                    client_rank_list=list(ranks), hetlora_gamma=0.9)
+    for g in range(n_gens):
+        for c in range(gen_size):
+            srv.begin(c)
+        for c in range(gen_size):
+            srv.receive(ClientUpdate(c, zero, float(weights[c]), g, 2))
+    assert srv.version == n_gens
+    w = weights / weights.sum()
+    untrained = (w[:, None] * (ranks[:, None] <= np.arange(r))).sum(0)
+    decay = (0.9 ** untrained).astype(np.float32) ** n_gens
+    got = srv.adapters["g"]["0"]["q"]
+    np.testing.assert_allclose(np.asarray(got["a"]),
+                               adapters["g"]["0"]["q"]["a"] * decay,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got["b"]),
+                               adapters["g"]["0"]["q"]["b"] * decay[:, None],
+                               rtol=1e-5)
+
+
+@given(st.integers(1, 4), st.floats(0.0, 2.0), st.floats(0.1, 1.5),
+       st.sampled_from(["merge", "drop"]), st.integers(0, 9999))
+@settings(max_examples=25, deadline=None)
+def test_generation_protocol_accounting_invariants(
+        gen_size, alpha, server_lr, policy, seed):
+    """Random launch/arrival/drop/duplicate patterns: aggregated adapters
+    stay finite, measured uploaded/downloaded bytes equal the closed-form
+    per-generation totals (every payload is the same dense fp32 layout),
+    and after finalize() every generation is fully accounted."""
+    from repro.comm import codec
+    from repro.comm.server import Broadcaster, ClientUpdate, GenServer
+    from repro.core import selection
+    rng = np.random.default_rng(seed)
+    adapters = _gen_tree(rng, 3)
+    n_elems = sum(x.size for x in jax.tree.leaves(adapters))
+    masks = selection.masks_like(adapters)
+    srv = GenServer("fl_lora", adapters, gen_size=gen_size,
+                    staleness_alpha=alpha, server_lr=server_lr,
+                    stale_policy=policy)
+    bc = Broadcaster("fp32")
+    inflight, next_cid = [], 0
+    fetches = received = dropped = dups = 0
+    up_bytes = down_bytes = 0
+    dense_size = None
+    for _ in range(30):
+        for _ in range(int(rng.integers(0, 3))):       # launches
+            gen = srv.begin(next_cid)
+            payload, _ = bc.payload_for(next_cid, srv.broadcast_state, gen)
+            down_bytes += len(payload)
+            fetches += 1
+            if dense_size is None:
+                dense_size = len(payload)
+            delta = jax.tree.map(
+                lambda x: (0.1 * rng.normal(size=x.shape)).astype(x.dtype),
+                adapters)
+            up = ClientUpdate(next_cid,
+                              codec.encode(delta, masks, 2),
+                              float(rng.uniform(0.5, 2.0)), gen, 2)
+            inflight.append(up)
+            next_cid += 1
+        while inflight and (rng.random() < 0.7 or len(inflight) > 8):
+            up = inflight.pop(int(rng.integers(len(inflight))))
+            if rng.random() < 0.25:                    # lost uplink
+                srv.record_drop(up.version, up.client_id)
+                dropped += 1
+                continue
+            up_bytes += len(up.payload)
+            received += 1
+            srv.receive(up)
+            if rng.random() < 0.2:                     # duplicate replay
+                up_bytes += len(up.payload)
+                srv.receive(up)
+                dups += 1
+    for up in inflight:                                # drain
+        srv.record_drop(up.version, up.client_id)
+        dropped += 1
+    srv.finalize()
+    assert srv.pending() == {}                         # fully accounted
+    for leaf in jax.tree.leaves(srv.adapters):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert len(srv.staleness_log) == received          # dups never log
+    assert srv.stats["drops"] == dropped
+    assert srv.stats["duplicates"] == dups
+    # byte closed forms: every upload/broadcast is the same dense layout
+    if received or dups:
+        one = codec.payload_stats(
+            codec.encode(jax.tree.map(np.zeros_like, adapters), masks, 2))
+        assert one.data_bytes == 4 * n_elems
+        assert up_bytes == (received + dups) * one.total_bytes
+    assert down_bytes == fetches * (dense_size or 0)
+
+
 @given(st.integers(0, 30))
 @settings(max_examples=10, deadline=None)
 def test_lora_matmul_kernel_property(seed):

@@ -202,11 +202,16 @@ def test_hello_out_of_range_client_id_raises(tmp_path):
 
 
 def test_fleet_rejects_unsupported_configs():
-    for kw in (dict(server_mode="async"), dict(method="full_ft"),
-               dict(participation=0.5), dict(track_similarity=True),
-               dict(network=network.ideal_network(2))):
+    for kw in (dict(method="full_ft"), dict(participation=0.5),
+               dict(track_similarity=True),
+               dict(network=network.ideal_network(2)),
+               dict(server_mode="warp")):
         with pytest.raises(ValueError):
             fleet.check_fleet_config(_fed(**kw))
+    # async is no longer rejected: the generation protocol covers every
+    # adapter method over the real socket (serve_async)
+    fleet.check_fleet_config(_fed(server_mode="async"))
+    fleet.check_fleet_config(_fed(server_mode="async", method="flexlora"))
 
 
 def test_hello_protocol_version_skew_raises(tmp_path):
@@ -474,6 +479,149 @@ def test_fast_client_next_round_fetch_is_not_answered_early(tmp_path):
     # would answer the early round-2 FETCH with version 0 again
     assert f_versions == [0, 1]
     assert hist["round"] == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# the generation protocol over the socket (async fleet)
+# ---------------------------------------------------------------------------
+
+
+def test_async_fleet_disconnect_mid_generation_round_proceeds(tmp_path):
+    """Torture (generation protocol): one real async client plus one that
+    joins a generation and dies with its upload half-sent.  The server
+    records the drop, the stranded generation closes as partial per the
+    policy, and the surviving client carries the run to the target version
+    with balanced byte accounting — the generation twin of the sync
+    mid-upload-death test above."""
+    spec = fleet.DataSpec(n_train=160, n_test=64)
+    fed = _fed(method="flexlora", rounds=2, n_clients=2,
+               server_mode="async", buffer_size=2)
+    cfg, train, test, parts = spec.build(2)
+    st = xport.ServerTransport(_uds(tmp_path), timeout=60)
+
+    def good_client():
+        fleet.run_client_async(0, spec, fed, st.address, timeout=60)
+
+    def bad_client():
+        raw = socket.socket(socket.AF_UNIX)
+        raw.connect(st.address[4:])
+        raw.settimeout(60)
+        xport.write_frame(raw, xport.KIND_HELLO, xport.PROTOCOL_VERSION,
+                          b'{"client": 1}')
+        xport.write_frame(raw, xport.KIND_FETCH, 0)
+        fr = xport.read_frame(raw)            # joins generation 0...
+        assert fr.kind == xport.KIND_BCAST and fr.version == 0
+        raw.sendall(xport.HDR.pack(50_000, xport.KIND_UPLOAD, 0) + b"trunc")
+        raw.close()                           # ...and dies mid-upload
+
+    threads = [threading.Thread(target=good_client),
+               threading.Thread(target=bad_client)]
+    for th in threads:
+        th.start()
+    try:
+        hist = fleet.serve_async(cfg, fed, train, test, parts, st)
+    finally:
+        st.close()
+        for th in threads:
+            th.join()
+    assert hist["round"] == [1, 2]
+    assert all(np.isfinite(a) for a in hist["acc"])
+    s = hist["gen_stats"]
+    assert s["drops"] == 1                  # the mid-upload death
+    assert s["flushed"] + s["partial"] == 2
+    assert s["partial"] >= 1                # a stranded generation closed
+    tr = hist["traffic"]
+    # the half-sent frame never completed: no upload bytes from client 1
+    assert tr["uplink_bytes"][0] > 0 and tr["uplink_bytes"][1] == 0
+    assert tr["downlink_bytes"][0] > 0 and tr["downlink_bytes"][1] > 0
+    assert hist["uploaded_cum"] == tr["total_up"]
+    assert hist["downloaded_cum"] == tr["total_down"]
+
+
+def test_async_fleet_duplicate_stale_upload_is_rejected(tmp_path):
+    """Torture (generation protocol): with gen_size=1 the first upload
+    flushes generation 0, making the second client's upload stale; its
+    replay — a duplicate upload for a stale generation — must be rejected
+    while the run proceeds to the target version and every transmitted
+    byte stays accounted."""
+    spec = fleet.DataSpec(n_train=160, n_test=64)
+    fed = _fed(method="flexlora", rounds=2, n_clients=2,
+               server_mode="async", buffer_size=1)
+    cfg, train, test, parts = spec.build(2)
+    # flexlora trains at fed.rank; a zero delta leaves aggregation finite
+    adapters = lora.init_adapters(CFG, jax.random.PRNGKey(0), fed.rank)
+    zero = codec.encode(
+        jax.tree.map(lambda x: np.zeros_like(np.asarray(x)), adapters),
+        selection.masks_like(adapters), 2)
+    st = xport.ServerTransport(_uds(tmp_path), timeout=60)
+    errors = []
+
+    def clients():
+        try:
+            c0 = socket.socket(socket.AF_UNIX)
+            c1 = socket.socket(socket.AF_UNIX)
+            for i, c in enumerate((c0, c1)):
+                c.connect(st.address[4:])
+                c.settimeout(60)
+                xport.write_frame(c, xport.KIND_HELLO,
+                                  xport.PROTOCOL_VERSION,
+                                  json.dumps({"client": i}).encode())
+            for c in (c0, c1):
+                xport.write_frame(c, xport.KIND_FETCH, 0)
+                fr = xport.read_frame(c)
+                assert fr.kind == xport.KIND_BCAST and fr.version == 0
+            # both joined generation 0; the first upload flushes it
+            xport.write_frame(c0, xport.KIND_UPLOAD, 0, zero)
+            time.sleep(0.2)
+            xport.write_frame(c1, xport.KIND_UPLOAD, 0, zero)  # stale
+            time.sleep(0.2)
+            xport.write_frame(c1, xport.KIND_UPLOAD, 0, zero)  # duplicate
+            time.sleep(0.2)
+            # the run continues: c0 joins generation 1 and completes it
+            xport.write_frame(c0, xport.KIND_FETCH, 1)
+            fr = xport.read_frame(c0)
+            assert fr.kind == xport.KIND_BCAST and fr.version == 1
+            xport.write_frame(c0, xport.KIND_UPLOAD, 1, zero)
+            assert xport.read_frame(c0).kind == xport.KIND_DONE
+            assert xport.read_frame(c1).kind == xport.KIND_DONE
+            c0.close(), c1.close()
+        except Exception as e:  # surface thread failures in the test body
+            errors.append(e)
+
+    th = threading.Thread(target=clients)
+    th.start()
+    try:
+        hist = fleet.serve_async(cfg, fed, train, test, parts, st)
+    finally:
+        st.close()
+        th.join()
+    assert not errors, errors
+    assert hist["round"] == [1, 2]
+    s = hist["gen_stats"]
+    assert s["duplicates"] == 1
+    assert s["stale_merged"] == 1
+    assert s["flushed"] == 2
+    assert max(hist["staleness"]) == 1
+    # duplicate bytes travelled, so both tallies include them — and agree
+    assert hist["uploaded_cum"] == hist["traffic"]["total_up"]
+    assert hist["downloaded_cum"] == hist["traffic"]["total_down"]
+
+
+@pytest.mark.slow
+def test_async_fleet_flexlora_smoke(tmp_path):
+    """Acceptance: a real 4-process async fleet runs flexlora through 3
+    generations over UDS (the CI async-fleet-smoke shape, in-suite)."""
+    spec = fleet.DataSpec()
+    fed = _fed(method="flexlora", rounds=3, n_clients=4,
+               server_mode="async", buffer_size=2)
+    hist = fleet.launch_fleet(spec, fed, transport="uds",
+                              address=_uds(tmp_path), timeout=180)
+    assert hist["round"][-1] == 3
+    assert all(np.isfinite(a) for a in hist["acc"])
+    s = hist["gen_stats"]
+    assert s["flushed"] + s["partial"] >= 3
+    assert hist["uploaded_cum"] == hist["traffic"]["total_up"]
+    assert hist["downloaded_cum"] == hist["traffic"]["total_down"]
 
 
 @pytest.mark.slow

@@ -19,6 +19,7 @@ from repro.configs.base import get_config
 from repro.core.federation import FedConfig, run_federated
 from repro.data.partition import dirichlet_partition, pathological_partition
 from repro.data.synthetic import make_classification
+from repro.obs import log
 
 ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 
@@ -76,5 +77,5 @@ def emit(name, rows, derived=""):
         tag = f"{name}/{r['method']}_r{r['rank']}" + (
             f"_a{r['alpha']}" if r.get("alpha") is not None else "")
         us = r["wall_s"] * 1e6 / max(ROUNDS, 1)
-        print(f"{tag},{us:.0f},acc={r['acc']:.4f};uploaded={r['uploaded']:.3e}"
-              + (f";{derived}" if derived else ""))
+        log.info(f"{tag},{us:.0f},acc={r['acc']:.4f};uploaded={r['uploaded']:.3e}"
+                 + (f";{derived}" if derived else ""))

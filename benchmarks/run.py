@@ -29,7 +29,7 @@ import traceback
 
 from benchmarks import (async_stragglers, codec_accuracy, cohort_throughput,
                         comm_cost, fig3_rank_selection, fig6_alternating,
-                        fig8_convergence, fig10_client_drift,
+                        fig8_convergence, fig10_client_drift, obs_overhead,
                         table1_main_grid, table2_model_scale, table4_dp,
                         table7_pathologic, table8_resource_het,
                         table9_criterion)
@@ -49,6 +49,7 @@ TABLES = {
     "codec": codec_accuracy.main,
     "async": async_stragglers.main,
     "cohort": cohort_throughput.main,
+    "obs": obs_overhead.main,
 }
 
 # benches the --check gate covers: name -> committed artifact filename
@@ -61,6 +62,7 @@ ARTIFACTS = {
     "codec": "codec_accuracy",
     "cohort": "cohort_throughput",
     "async": "async_stragglers",
+    "obs": "obs_overhead",
 }
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 REGRESSION_TOL = 0.01   # fail when measured bytes grow by more than 1%

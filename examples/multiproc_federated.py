@@ -65,6 +65,11 @@ def main():
                     help="cohort compute backend (core/executors.py); a "
                          "fleet client is a cohort of one, so both "
                          "backends are bit-identical here")
+    ap.add_argument("--obs-dir", default=None,
+                    help="enable observability: every process writes a "
+                         "JSONL event log here, merged server-side into "
+                         "trace.jsonl/trace.chrome.json plus Prometheus "
+                         "metrics")
     args = ap.parse_args()
 
     spec = fleet.DataSpec()
@@ -80,8 +85,11 @@ def main():
 
     t0 = time.time()
     hist = fleet.launch_fleet(spec, fed, transport=args.transport,
-                              timeout=args.timeout)
+                              timeout=args.timeout, obs_dir=args.obs_dir)
     wall = time.time() - t0
+    if args.obs_dir is not None and "obs" in hist:
+        print(f"obs artifacts: {', '.join(sorted(hist['obs']))} "
+              f"-> {args.obs_dir}")
     for r, acc, up, down in zip(hist["round"], hist["acc"],
                                 hist["uploaded"], hist["downloaded"]):
         print(f"round {r:2d}  acc {acc:.4f}  up {up/1e6:.3f} MB"

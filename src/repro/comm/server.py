@@ -42,6 +42,7 @@ from typing import Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
+from repro import obs
 from repro.comm import codec
 from repro.core import aggregate, selection
 from repro.core.lora import iter_modules
@@ -294,10 +295,14 @@ class GenServer:
 
     def begin(self, client_id: int) -> int:
         """Register one launch into the open generation; returns its id."""
+        if self.version not in self._gens:
+            obs.event("gen.open", gen=self.version, target=self.gen_size)
         g = self._gens.setdefault(self.version,
                                   _Generation(origin=self.adapters))
         g.expected += 1
         g.outstanding += 1
+        obs.event("gen.launch", gen=self.version, client=client_id,
+                  expected=g.expected)
         return self.version
 
     def in_current(self, client_id: int) -> bool:
@@ -324,12 +329,17 @@ class GenServer:
             # unknown/finalized generation, or a duplicate upload for one —
             # rejected outright, the accounting stays balanced
             self.stats["duplicates"] += 1
+            obs.event("gen.duplicate", gen=gid, client=update.client_id)
+            obs.count("gen_duplicates_total")
             return False
         g.outstanding -= 1
         self.staleness_log.append(self.version - gid)
+        obs.observe("gen_staleness", self.version - gid)
         if gid == self.version:
             g.members.add(update.client_id)
             g.buffer[update.client_id] = update
+            obs.event("gen.fill", gen=gid, client=update.client_id,
+                      buffered=len(g.buffer), target=self.gen_size)
             if len(g.buffer) >= self.gen_size:
                 self._flush_current(partial=False)
                 return True
@@ -340,8 +350,13 @@ class GenServer:
         g.members.add(update.client_id)
         if self.stale_policy == "merge":
             g.buffer[update.client_id] = update
+            obs.event("gen.stale_buffered", gen=gid, client=update.client_id,
+                      staleness=self.version - gid)
         else:
             self.stats["stale_dropped"] += 1
+            obs.event("gen.stale_dropped", gen=gid, client=update.client_id,
+                      staleness=self.version - gid)
+            obs.count("gen_stale_total", outcome="dropped")
         if g.outstanding <= 0:
             self._close_stale(gid)
         return False
@@ -355,6 +370,8 @@ class GenServer:
         g.outstanding -= 1
         g.drops += 1
         self.stats["drops"] += 1
+        obs.event("gen.drop", gen=gen, client=client_id)
+        obs.count("gen_drops_total")
         if gen < self.version and g.outstanding <= 0:
             self._close_stale(gen)
 
@@ -381,6 +398,11 @@ class GenServer:
         gid = self.version
         self.version += 1
         self.stats["partial" if partial else "flushed"] += 1
+        obs.event("gen.flush", gen=gid,
+                  kind="partial" if partial else "full", n=len(g.buffer),
+                  outstanding=g.outstanding)
+        obs.count("gen_flushes_total",
+                  kind="partial" if partial else "full")
         g.buffer = {}
         if g.outstanding <= 0:
             del self._gens[gid]
@@ -398,6 +420,9 @@ class GenServer:
                                  tree_scale(tree_sub(new, g.origin), beta))
         self.stats["stale_merged"] += 1
         self.stats["merged_updates"] += len(g.buffer)
+        obs.event("gen.stale_merge", gen=gid, tau=tau, beta=beta,
+                  n=len(g.buffer))
+        obs.count("gen_stale_total", outcome="merged")
 
     def close_partial(self) -> bool:
         """Turn over an open generation that can no longer fill (every live
@@ -417,6 +442,9 @@ class GenServer:
         self.stats["partial"] += 1
         self.stats["partial_dropped"] += len(g.buffer)
         gid = self.version
+        obs.event("gen.flush", gen=gid, kind="partial_dropped",
+                  n=len(g.buffer), outstanding=g.outstanding)
+        obs.count("gen_flushes_total", kind="partial")
         g.buffer = {}
         self.version += 1
         if g.outstanding <= 0:

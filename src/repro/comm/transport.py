@@ -48,6 +48,7 @@ from typing import Optional, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro import obs
 from repro.comm import network as net
 
 PROTOCOL_VERSION = 1
@@ -284,10 +285,23 @@ class ServerTransport:
         self.bytes_up.setdefault(cid, 0.0)
         self.bytes_down.setdefault(cid, 0.0)
         self.overhead_up += HDR.size
+        # the wire_* metrics mirror this accounting increment for increment
+        # (tests assert their totals equal traffic() exactly)
+        obs.count("wire_overhead_bytes_total", HDR.size, direction="up")
         if frame.kind == KIND_UPLOAD:
             self.bytes_up[cid] += len(frame.payload)
+            obs.count("wire_payload_bytes_total", len(frame.payload),
+                      direction="up", client=cid)
         else:
             self.overhead_up += len(frame.payload)
+            obs.count("wire_overhead_bytes_total", len(frame.payload),
+                      direction="up")
+        if obs.enabled():
+            obs.event("wire.frame_in", client=cid,
+                      kind=KIND_NAMES.get(frame.kind, frame.kind),
+                      bytes=len(frame.payload), version=frame.version)
+            obs.count("wire_frames_total", direction="in",
+                      kind=KIND_NAMES.get(frame.kind, frame.kind))
 
     def traffic(self) -> dict:
         """Measured payload bytes per client and direction, same shape as
@@ -316,6 +330,9 @@ class ServerTransport:
         if conn.client_id is not None and conn.client_id in self._conns:
             del self._conns[conn.client_id]
             self._events.append((conn.client_id, None))
+            obs.event("wire.disconnect", client=conn.client_id,
+                      mid_frame=conn.buf.incomplete)
+            obs.count("wire_disconnects_total")
 
     def _on_frame(self, conn: _Conn, frame: Frame):
         if conn.client_id is None:
@@ -404,11 +421,22 @@ class ServerTransport:
             self._disconnect(conn)
             return False
         self.overhead_down += HDR.size
+        obs.count("wire_overhead_bytes_total", HDR.size, direction="down")
         if kind == KIND_BCAST:
             self.bytes_down.setdefault(client_id, 0.0)
             self.bytes_down[client_id] += len(payload)
+            obs.count("wire_payload_bytes_total", len(payload),
+                      direction="down", client=client_id)
         else:
             self.overhead_down += len(payload)
+            obs.count("wire_overhead_bytes_total", len(payload),
+                      direction="down")
+        if obs.enabled():
+            obs.event("wire.frame_out", client=client_id,
+                      kind=KIND_NAMES.get(kind, kind), bytes=len(payload),
+                      version=version)
+            obs.count("wire_frames_total", direction="out",
+                      kind=KIND_NAMES.get(kind, kind))
         return True
 
     def close(self):

@@ -34,12 +34,14 @@ float arithmetic exactly, which the suite re-verifies on every run).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import lora, selection
 from repro.launch import steps as steps_mod
 from repro.models import model as M
@@ -320,6 +322,11 @@ class VectorizedExecutor(ClientExecutor):
             adapter_loss_fn(cfg, scale), opt_cfg, lr_b_mult=fed.lr_b_mult)
         self._full_step = None
         self._full_single = None
+        # first-seen bucket shape signatures: a new signature means jax
+        # compiles a new cohort program on this dispatch (shape-keyed jit
+        # cache), which is how the compile counter/timer tell a compiling
+        # call from a cache hit without touching jax internals
+        self._seen_shapes = set()
 
     # -- adapter track ------------------------------------------------------
 
@@ -333,14 +340,51 @@ class VectorizedExecutor(ClientExecutor):
                     # outlier) — the per-batch reference step keeps it
                     # bit-exact with `looped` at zero extra compiles
                     i = idxs[0]
+                    obs.event("exec.singleton", client=entries[i].k,
+                              steps=len(plans[i].local_idx))
                     outs[i] = run_single_client(ctx, entries[i], plans[i])
                     continue
-                bucket_outs = self._run_bucket(
-                    ctx, [entries[i] for i in idxs],
-                    [plans[i] for i in idxs])
+                bentries = [entries[i] for i in idxs]
+                bplans = [plans[i] for i in idxs]
+                bucket_outs = self._observed_bucket(
+                    "cohort", bentries[0].parity, bplans,
+                    lambda: self._run_bucket(ctx, bentries, bplans))
                 for i, out in zip(idxs, bucket_outs):
                     outs[i] = out
         return outs
+
+    def _observed_bucket(self, tag, parity, bplans, call):
+        """Run one vectorized bucket dispatch under a trace span with the
+        bucket's shape, padding waste, and compile status attached.  The
+        compile flag comes from the first-seen-shape set; the timer never
+        inserts a device sync, so enabled and disabled runs execute the
+        same program (the host-side loss readback already bounds the
+        dispatch)."""
+        K, T = len(bplans), max(len(p.local_idx) for p in bplans)
+        total = sum(len(p.local_idx) for p in bplans)
+        if tag == "cohort" and self.fed.method == "lora_a2":
+            probe_T = max(len(p.probe_idx) for p in bplans)
+        else:
+            probe_T = 0
+        sig = (tag, K, T, probe_T, parity, total == K * T)
+        compiling = sig not in self._seen_shapes
+        self._seen_shapes.add(sig)
+        waste = (K * T - total) / (K * T)
+        t0 = time.perf_counter()
+        with obs.span("exec.bucket", **{"K": K, "T": T, "waste": waste,
+                                        "compile": compiling, "tag": tag}):
+            out = call()
+        if obs.enabled():
+            obs.observe("executor_pad_waste", waste)
+            obs.count("executor_steps_total", total, kind="valid")
+            if K * T > total:
+                obs.count("executor_steps_total", K * T - total,
+                          kind="padded")
+            if compiling:
+                obs.count("executor_compiles_total", executor=self.name)
+                obs.observe("executor_compile_seconds",
+                            time.perf_counter() - t0)
+        return out
 
     def _run_bucket(self, ctx, entries, plans):
         fed, cfg = ctx.fed, ctx.cfg
@@ -410,6 +454,8 @@ class VectorizedExecutor(ClientExecutor):
             if len(idxs) == 1:  # singleton: degenerate to the reference path
                 if self._full_single is None:
                     self._full_single = LoopedExecutor(self.cfg, self.fed)
+                obs.event("exec.singleton", client=plans[idxs[0]].k,
+                          steps=len(plans[idxs[0]].local_idx))
                 outs[idxs[0]] = self._full_single.run_full_ft(
                     start_params, client_ds, [plans[idxs[0]]])[0]
                 continue
@@ -421,7 +467,9 @@ class VectorizedExecutor(ClientExecutor):
             batch, valid = _stack_batches(
                 self.cfg, [client_ds[p.k] for p in bucket],
                 [p.local_idx for p in bucket])
-            finals, losses = self._full_step(start_params, batch, valid)
+            finals, losses = self._observed_bucket(
+                "full_ft", PARITY_BOTH, bucket,
+                lambda: self._full_step(start_params, batch, valid))
             losses = np.asarray(losses)
             for pos, (i, plan) in enumerate(zip(idxs, bucket)):
                 final_i = jax.tree.map(lambda x, p=pos: x[p], finals)

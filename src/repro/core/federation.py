@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.comm import codec
 from repro.comm import network as net
 from repro.comm import pipeline
@@ -259,6 +260,13 @@ def _client_payload(ctx: _Ctx, e, out) -> _ClientResult:
         want = int(4 * _upload_count(e.state, out.masks, e.parity))
         assert stats.data_bytes == want, \
             f"measured {stats.data_bytes}B != analytic {want}B"
+    if obs.enabled():
+        sel = int(sum(float(np.asarray(m).sum())
+                      for m in out.masks.values()))
+        obs.observe("rank_selected_slots", sel, client=e.k)
+        obs.event("fed.upload_built", client=e.k, bytes=len(payload),
+                  selected_slots=sel, parity=int(e.parity),
+                  n_steps=out.n_steps)
     return _ClientResult(e.k, payload, out.masks, out.losses, out.n_steps)
 
 
@@ -340,6 +348,50 @@ def skip_client_rng(ctx: _Ctx, k):
         ctx.kd, _ = jax.random.split(ctx.kd)
 
 
+def _count_payload(direction, payload, *, client=None):
+    """Mirror one byte-ledger increment into the metrics registry: the
+    payload's total bytes (labelled by client) plus the per-section split
+    read off the wire header.  Sections assert-sum to the total inside
+    ``codec.payload_stats``, so the registry can never drift from the
+    ledger.  Call sites gate on ``obs.enabled()`` — the header parse is
+    not free and the disabled path must stay a no-op."""
+    stats = codec.payload_stats(payload)
+    obs.count(f"fed_{direction}_bytes_total", len(payload), client=client)
+    for sec in ("header", "index", "scale", "data"):
+        b = getattr(stats, f"{sec}_bytes")
+        if b:
+            obs.count(f"fed_{direction}_section_bytes_total", b, section=sec)
+
+
+def _record_round(history, *, round_id, acc, losses, sim_time):
+    """Append one per-round history row — the single record path shared by
+    the sync driver, the async driver, and the full-FT driver (and reused
+    by the socket fleet's servers).  An empty cohort records NaN loss
+    explicitly instead of tripping numpy's empty-mean RuntimeWarning."""
+    loss = float(np.mean(losses)) if losses else float("nan")
+    history["round"].append(round_id)
+    history["acc"].append(acc)
+    history["loss"].append(loss)
+    history["uploaded"].append(history["uploaded_cum"])
+    history["downloaded"].append(history["downloaded_cum"])
+    history["sim_time"].append(sim_time)
+    obs.event("fed.record", round=round_id, t_sim=sim_time, acc=acc,
+              loss=loss, uploaded=history["uploaded_cum"],
+              downloaded=history["downloaded_cum"])
+    return loss
+
+
+def _eval_acc(evaluate, params, adapters, test_ds, *, round_id):
+    """Server-side evaluation under a trace span (NaN for decoder tracks,
+    which have no accuracy eval)."""
+    if evaluate is None:
+        return float("nan")
+    with obs.span("fed.eval", round=round_id):
+        acc = evaluate(params, adapters, test_ds)
+    obs.count("fed_evals_total")
+    return acc
+
+
 def run_federated(cfg: ModelConfig, fed: FedConfig, train_ds, test_ds,
                   client_indices):
     """Run the full federated fine-tuning session.  Returns a history dict."""
@@ -395,53 +447,62 @@ def _run_sync(ctx: _Ctx, adapters, history, test_ds, evaluate):
     clock = net.RoundClock()
 
     for t in range(1, fed.rounds + 1):
-        parity = _round_parity(fed, t)
-        participants = _sample_participants(ctx.rng, fed)
-        ref_adapters = server.adapters  # pre-aggregation global (tracking)
+        with obs.span("fed.round", round=t) as sp:
+            parity = _round_parity(fed, t)
+            participants = _sample_participants(ctx.rng, fed)
+            ref_adapters = server.adapters  # pre-aggregation global
 
-        entries, down_arrs = [], []
-        for k in participants:
-            bcast, global_at_client = bcaster.payload_for(
-                k, server.adapters, server.version)
-            down = ctx.net.downlink(k, bcast, now=clock.now)
-            history["downloaded_cum"] += len(bcast)
-            entries.append(executors.CohortEntry(
-                k, global_at_client, parity, _enc_seed(fed, t, k)))
-            down_arrs.append(down.arrived_at)
+            entries, down_arrs = [], []
+            for k in participants:
+                bcast, global_at_client = bcaster.payload_for(
+                    k, server.adapters, server.version)
+                down = ctx.net.downlink(k, bcast, now=clock.now)
+                history["downloaded_cum"] += len(bcast)
+                if obs.enabled():
+                    _count_payload("downlink", bcast, client=k)
+                entries.append(executors.CohortEntry(
+                    k, global_at_client, parity, _enc_seed(fed, t, k)))
+                down_arrs.append(down.arrived_at)
 
-        results = _run_cohort(ctx, entries)
+            results = _run_cohort(ctx, entries)
 
-        updates, arrivals = [], []
-        for res, d_arr in zip(results, down_arrs):
-            t_done = d_arr + ctx.net.compute_time(res.client_id, res.n_steps,
-                                                  fed.step_time_s)
-            up = ctx.net.uplink(res.client_id, res.payload, now=t_done)
-            history["uploaded_cum"] += len(res.payload)
-            arrivals.append(up.arrived_at if not up.dropped else t_done)
-            if not up.dropped:
-                updates.append(ClientUpdate(res.client_id, res.payload,
-                                            ctx.weights[res.client_id],
-                                            server.version, parity,
-                                            sent_at=t_done,
-                                            arrived_at=up.arrived_at))
-        deltas = server.aggregate_round(updates)
-        clock.advance_to(max(arrivals, default=clock.now))
+            updates, arrivals = [], []
+            for res, d_arr in zip(results, down_arrs):
+                t_done = d_arr + ctx.net.compute_time(
+                    res.client_id, res.n_steps, fed.step_time_s)
+                up = ctx.net.uplink(res.client_id, res.payload, now=t_done)
+                history["uploaded_cum"] += len(res.payload)
+                if obs.enabled():
+                    _count_payload("uplink", res.payload,
+                                   client=res.client_id)
+                arrivals.append(up.arrived_at if not up.dropped else t_done)
+                if not up.dropped:
+                    updates.append(ClientUpdate(res.client_id, res.payload,
+                                                ctx.weights[res.client_id],
+                                                server.version, parity,
+                                                sent_at=t_done,
+                                                arrived_at=up.arrived_at))
+                else:
+                    obs.event("fed.upload_dropped", round=t,
+                              client=res.client_id, t_sim=t_done)
+                    obs.count("fed_upload_drops_total")
+            deltas = server.aggregate_round(updates)
+            clock.advance_to(max(arrivals, default=clock.now))
+            obs.count("fed_rounds_total")
+            sp["participants"] = len(participants)
+            sp["t_sim_end"] = clock.now
 
-        if t % fed.eval_every == 0 or t == fed.rounds:
-            acc = evaluate(ctx.params, server.adapters, test_ds) \
-                if evaluate else float("nan")
-            history["round"].append(t)
-            history["acc"].append(acc)
-            history["loss"].append(
-                float(np.mean([l for r in results for l in r.losses])))
-            history["uploaded"].append(history["uploaded_cum"])
-            history["downloaded"].append(history["downloaded_cum"])
-            history["sim_time"].append(clock.now)
-            if fed.track_similarity:
-                history["mask_overlap"].append(
-                    _mask_overlap([r.masks for r in results]))
-                history["update_cosine"].append(
-                    _update_cosine(deltas, ref_adapters, parity))
+            if t % fed.eval_every == 0 or t == fed.rounds:
+                acc = _eval_acc(evaluate, ctx.params, server.adapters,
+                                test_ds, round_id=t)
+                _record_round(history, round_id=t, acc=acc,
+                              losses=[l for r in results for l in r.losses],
+                              sim_time=clock.now)
+                if fed.track_similarity:
+                    history["mask_overlap"].append(
+                        _mask_overlap([r.masks for r in results]))
+                    history["update_cosine"].append(
+                        _update_cosine(deltas, ref_adapters, parity))
     history["adapters"] = server.adapters
 
 
@@ -522,43 +583,44 @@ def _run_async(ctx: _Ctx, adapters, history, test_ds, evaluate):
         and DP key streams are consumed in)."""
         nonlocal seq, n_launched
         entries, infos = [], []
-        for t_ready, k in sorted(ready, key=lambda x: x[1]):
-            # async has no global rounds, so the alternating freeze is
-            # paced by each client's own launch count — both halves still
-            # train equally often even when clients straddle generations
-            launches[k] += 1
-            parity = _round_parity(fed, launches[k])
-            gen = server.begin(k)
-            bcast, global_at_client = bcaster.payload_for(
-                k, server.broadcast_state, gen)
-            down = ctx.net.downlink(k, bcast, now=max(t_ready, gen_open_at))
-            history["downloaded_cum"] += len(bcast)
-            entries.append(executors.CohortEntry(
-                k, global_at_client, parity, _enc_seed(fed, gen + 1, k)))
-            infos.append((k, gen, parity, down.arrived_at))
-            n_launched += 1
-        results = _run_cohort(ctx, entries)
+        with obs.span("fed.launch_cohort", gen=server.version) as sp:
+            for t_ready, k in sorted(ready, key=lambda x: x[1]):
+                # async has no global rounds, so the alternating freeze is
+                # paced by each client's own launch count — both halves still
+                # train equally often even when clients straddle generations
+                launches[k] += 1
+                parity = _round_parity(fed, launches[k])
+                gen = server.begin(k)
+                bcast, global_at_client = bcaster.payload_for(
+                    k, server.broadcast_state, gen)
+                down = ctx.net.downlink(k, bcast,
+                                        now=max(t_ready, gen_open_at))
+                history["downloaded_cum"] += len(bcast)
+                if obs.enabled():
+                    _count_payload("downlink", bcast, client=k)
+                entries.append(executors.CohortEntry(
+                    k, global_at_client, parity, _enc_seed(fed, gen + 1, k)))
+                infos.append((k, gen, parity, down.arrived_at))
+                n_launched += 1
+            results = _run_cohort(ctx, entries)
+            sp["n"] = len(entries)
         for res, (k, gen, parity, d_arr) in zip(results, infos):
             t_done = d_arr + ctx.net.compute_time(k, res.n_steps,
                                                   fed.step_time_s)
             up = ctx.net.uplink(k, res.payload, now=t_done)
             history["uploaded_cum"] += len(res.payload)
+            if obs.enabled():
+                _count_payload("uplink", res.payload, client=k)
             t_arr = up.arrived_at if not up.dropped else t_done
             heapq.heappush(heap, (t_arr, seq, k, res, gen, parity,
                                   up.dropped))
             seq += 1
 
     def record(version, now):
-        acc = evaluate(ctx.params, server.adapters, test_ds) \
-            if evaluate else float("nan")
-        losses = _ordered_losses(pending_losses)
-        history["round"].append(version)
-        history["acc"].append(acc)
-        history["loss"].append(float(np.mean(losses)) if losses
-                               else float("nan"))
-        history["uploaded"].append(history["uploaded_cum"])
-        history["downloaded"].append(history["downloaded_cum"])
-        history["sim_time"].append(now)
+        acc = _eval_acc(evaluate, ctx.params, server.adapters, test_ds,
+                        round_id=version)
+        _record_round(history, round_id=version, acc=acc,
+                      losses=_ordered_losses(pending_losses), sim_time=now)
         pending_losses.clear()
 
     launch_cohort([(0.0, k) for k in participants])
@@ -573,6 +635,10 @@ def _run_async(ctx: _Ctx, adapters, history, test_ds, evaluate):
             flushed = server.receive(
                 ClientUpdate(k, res.payload, ctx.weights[k], gen, parity,
                              arrived_at=t_arr))
+        obs.event("fed.harvest", gen=gen, client=k, t_sim=t_arr,
+                  dropped=dropped, flushed=flushed)
+        if flushed:
+            obs.count("fed_rounds_total")
         relaunch = n_launched < launch_budget and server.version < fed.rounds
         if flushed:
             gen_open_at = t_arr
@@ -616,47 +682,55 @@ def _run_full_ft(cfg, fed, params, client_ds, weights, test_ds, history, rng,
     # dense anyway — 'delta' falls back to the dense fp32 broadcast
     dl_codec = "fp32" if fed.downlink_codec == "delta" else fed.downlink_codec
     for t in range(1, fed.rounds + 1):
-        participants = _sample_participants(rng, fed)
-        bcast = codec.encode_dense(params, codec=dl_codec)
-        # clients train from the *decoded* broadcast (fp32 decodes to the
-        # server's params bit-exactly; bf16 is a lossy downlink)
-        client_params = params if dl_codec == "fp32" \
-            else codec.decode_dense(bcast)
-        plans, down_arrs = [], []
-        for k in participants:
-            down = transport.downlink(k, bcast, now=clock.now)
-            history["downloaded_cum"] += len(bcast)
-            down_arrs.append(down.arrived_at)
-            plans.append(executors.plan_client(fed, rng, client_ds[k], k))
-        outs = executor.run_full_ft(client_params, client_ds, plans)
+        with obs.span("fed.round", round=t) as sp:
+            participants = _sample_participants(rng, fed)
+            bcast = codec.encode_dense(params, codec=dl_codec)
+            # clients train from the *decoded* broadcast (fp32 decodes to
+            # the server's params bit-exactly; bf16 is a lossy downlink)
+            client_params = params if dl_codec == "fp32" \
+                else codec.decode_dense(bcast)
+            plans, down_arrs = [], []
+            for k in participants:
+                down = transport.downlink(k, bcast, now=clock.now)
+                history["downloaded_cum"] += len(bcast)
+                if obs.enabled():
+                    _count_payload("downlink", bcast, client=k)
+                down_arrs.append(down.arrived_at)
+                plans.append(executors.plan_client(fed, rng, client_ds[k], k))
+            outs = executor.run_full_ft(client_params, client_ds, plans)
 
-        deltas, survivors, losses, arrivals = [], [], [], []
-        for plan, out, d_arr in zip(plans, outs, down_arrs):
-            losses.extend(out.losses)
-            payload = codec.encode_dense(tree_sub(out.final, client_params),
-                                         codec=fed.codec,
-                                         seed=_enc_seed(fed, t, plan.k))
-            t_done = d_arr + \
-                transport.compute_time(plan.k, out.n_steps, fed.step_time_s)
-            up = transport.uplink(plan.k, payload, now=t_done)
-            history["uploaded_cum"] += len(payload)
-            arrivals.append(up.arrived_at if not up.dropped else t_done)
-            if not up.dropped:
-                deltas.append(codec.decode_dense(payload))
-                survivors.append(plan.k)
-        if deltas:
-            w = [weights[k] for k in survivors]
-            w = [x / sum(w) for x in w]
-            params = aggregate.fedavg_params(params, deltas, w)
-        clock.advance_to(max(arrivals, default=clock.now))
-        if t % fed.eval_every == 0 or t == fed.rounds:
-            acc = evaluate(params, None, test_ds) if evaluate else float("nan")
-            history["round"].append(t)
-            history["acc"].append(acc)
-            history["loss"].append(float(np.mean(losses)))
-            history["uploaded"].append(history["uploaded_cum"])
-            history["downloaded"].append(history["downloaded_cum"])
-            history["sim_time"].append(clock.now)
+            deltas, survivors, losses, arrivals = [], [], [], []
+            for plan, out, d_arr in zip(plans, outs, down_arrs):
+                losses.extend(out.losses)
+                payload = codec.encode_dense(
+                    tree_sub(out.final, client_params), codec=fed.codec,
+                    seed=_enc_seed(fed, t, plan.k))
+                t_done = d_arr + transport.compute_time(
+                    plan.k, out.n_steps, fed.step_time_s)
+                up = transport.uplink(plan.k, payload, now=t_done)
+                history["uploaded_cum"] += len(payload)
+                if obs.enabled():
+                    _count_payload("uplink", payload, client=plan.k)
+                arrivals.append(up.arrived_at if not up.dropped else t_done)
+                if not up.dropped:
+                    deltas.append(codec.decode_dense(payload))
+                    survivors.append(plan.k)
+                else:
+                    obs.event("fed.upload_dropped", round=t, client=plan.k,
+                              t_sim=t_done)
+                    obs.count("fed_upload_drops_total")
+            if deltas:
+                w = [weights[k] for k in survivors]
+                w = [x / sum(w) for x in w]
+                params = aggregate.fedavg_params(params, deltas, w)
+            clock.advance_to(max(arrivals, default=clock.now))
+            obs.count("fed_rounds_total")
+            sp["participants"] = len(participants)
+            sp["t_sim_end"] = clock.now
+            if t % fed.eval_every == 0 or t == fed.rounds:
+                acc = _eval_acc(evaluate, params, None, test_ds, round_id=t)
+                _record_round(history, round_id=t, acc=acc, losses=losses,
+                              sim_time=clock.now)
     history["params"] = params
     return history
 

@@ -25,6 +25,7 @@ import jax
 from repro.configs.base import SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_step
+from repro.obs import log
 
 ARCHS = [
     "rwkv6-7b", "qwen2-7b", "dbrx-132b", "kimi-k2-1t-a32b", "gemma3-12b",
@@ -191,15 +192,15 @@ def run_one(arch, shape_name, *, multi_pod=False, local_steps=None,
 
     if verbose:
         d = record.get("derived", {})
-        print(f"[dryrun] {arch} x {shape_name} mesh={record['mesh']} "
-              f"meta={bundle.meta} full_compile={t_full:.0f}s "
-              f"probes={record.get('probe_compile_s', '-')}s")
-        print(f"  hbm/device: args={full['memory'].get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
-              f"temp={full['memory'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
-              f"tpu-est={record['tpu_temp_estimate_bytes']/2**30:.2f}GiB")
+        log.info(f"[dryrun] {arch} x {shape_name} mesh={record['mesh']} "
+                 f"meta={bundle.meta} full_compile={t_full:.0f}s "
+                 f"probes={record.get('probe_compile_s', '-')}s")
+        log.info(f"  hbm/device: args={full['memory'].get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                 f"temp={full['memory'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                 f"tpu-est={record['tpu_temp_estimate_bytes']/2**30:.2f}GiB")
         if d:
-            print(f"  per-round/device: flops={d['flops']:.3e} "
-                  f"bytes={d['bytes']:.3e} collective={d['collective_bytes']:.3e}B")
+            log.info(f"  per-round/device: flops={d['flops']:.3e} "
+                     f"bytes={d['bytes']:.3e} collective={d['collective_bytes']:.3e}B")
     return record
 
 
@@ -271,7 +272,7 @@ def main():
             tag = f"{arch}_{shape}_{'multipod' if args.multi_pod else 'singlepod'}"
             path = os.path.join(args.out, tag + ".json")
             if os.path.exists(path):
-                print(f"[dryrun] skip existing {tag}")
+                log.info(f"[dryrun] skip existing {tag}")
                 continue
             try:
                 rec = run_one(arch, shape, multi_pod=args.multi_pod,
@@ -282,14 +283,14 @@ def main():
                     json.dump(rec, f, indent=1)
             except Exception as e:  # noqa: BLE001 — record and continue
                 failures.append((tag, repr(e)))
-                print(f"[dryrun] FAIL {tag}: {e}")
+                log.error(f"[dryrun] FAIL {tag}: {e}")
                 traceback.print_exc(limit=5)
     if failures:
-        print(f"\n{len(failures)} FAILURES:")
+        log.error(f"\n{len(failures)} FAILURES:")
         for tag, err in failures:
-            print(" ", tag, err)
+            log.error(f"  {tag} {err}")
         raise SystemExit(1)
-    print("\nall dry-runs passed")
+    log.info("\nall dry-runs passed")
 
 
 if __name__ == "__main__":

@@ -49,8 +49,7 @@ import os
 import tempfile
 import time
 
-import numpy as np
-
+from repro import obs
 from repro.comm import codec
 from repro.comm import transport as xport
 from repro.comm.server import Broadcaster, ClientUpdate, SyncServer
@@ -183,6 +182,8 @@ def serve(cfg, fed, train_ds, test_ds, client_indices,
                                              server.version)
             if transport.send(cid, xport.KIND_BCAST, server.version, payload):
                 history["downloaded_cum"] += len(payload)
+                if obs.enabled():
+                    federation._count_payload("downlink", payload, client=cid)
             else:
                 live.discard(cid)
             pending.discard(cid)
@@ -215,6 +216,9 @@ def serve(cfg, fed, train_ds, test_ds, client_indices,
             else:
                 uploads[cid] = fr
                 history["uploaded_cum"] += len(fr.payload)
+                if obs.enabled():
+                    federation._count_payload("uplink", fr.payload,
+                                              client=cid)
                 pending.discard(cid)
 
         now = time.monotonic() - t0
@@ -226,20 +230,16 @@ def serve(cfg, fed, train_ds, test_ds, client_indices,
         server.aggregate_round(updates)
 
         if t % fed.eval_every == 0 or t == fed.rounds:
-            acc = evaluate(ctx.params, server.adapters, test_ds) \
-                if evaluate else float("nan")
+            acc = federation._eval_acc(evaluate, ctx.params, server.adapters,
+                                       test_ds, round_id=t)
             # every client that reported a meta trained this round — like
             # the in-process engine, whose loss mean includes clients whose
             # uplink then dropped
-            losses = [l for cid in sorted(metas)
-                      for l in metas[cid].get("losses", [])]
-            history["round"].append(t)
-            history["acc"].append(acc)
-            history["loss"].append(float(np.mean(losses)) if losses
-                                   else float("nan"))
-            history["uploaded"].append(history["uploaded_cum"])
-            history["downloaded"].append(history["downloaded_cum"])
-            history["sim_time"].append(time.monotonic() - t0)
+            federation._record_round(
+                history, round_id=t, acc=acc,
+                losses=[l for cid in sorted(metas)
+                        for l in metas[cid].get("losses", [])],
+                sim_time=time.monotonic() - t0)
 
     for cid in transport.clients:
         transport.send(cid, xport.KIND_DONE, server.version)
@@ -254,11 +254,24 @@ def serve(cfg, fed, train_ds, test_ds, client_indices,
 # ---------------------------------------------------------------------------
 
 
+def _client_obs(client_id: int, obs_dir):
+    """Per-process observability for a fleet client: an incremental JSONL
+    sink under obs_dir (flushed per event, so a killed process still
+    leaves its log) that the server merges into one ordered trace.  This
+    replaces interleaved client stdout as the fleet's output channel."""
+    if obs_dir is None:
+        return
+    obs.configure(proc=f"client-{client_id}",
+                  jsonl=os.path.join(obs_dir, f"client_{client_id}.jsonl"))
+    obs.event("client.up", client=client_id)
+
+
 def run_client(client_id: int, spec: DataSpec, fed, address: str,
-               timeout: float = 120.0):
+               timeout: float = 120.0, obs_dir=None):
     """One client process: rebuild the session from seeds, then per round
     fetch → reconstruct global state → train own shard → upload."""
     check_fleet_config(fed)
+    _client_obs(client_id, obs_dir)
     cfg, train, _test, parts = spec.build(fed.n_clients)
     ctx, _ = federation.build_session(cfg, fed, train, parts, None)
     state = None
@@ -279,12 +292,16 @@ def run_client(client_id: int, spec: DataSpec, fed, address: str,
                 if j != client_id:
                     federation.skip_client_rng(ctx, j)
                     continue
-                res = federation._client_update(
-                    ctx, state, j, parity, federation._enc_seed(fed, t, j))
+                with obs.span("client.round", round=t, client=client_id):
+                    res = federation._client_update(
+                        ctx, state, j, parity,
+                        federation._enc_seed(fed, t, j))
                 ct.upload(res.payload, fr.version,
                           meta={"client": j, "parity": parity,
                                 "n_steps": res.n_steps,
                                 "losses": res.losses})
+    if obs_dir is not None:     # only tear down a session this proc opened
+        obs.disable()
 
 
 # ---------------------------------------------------------------------------
@@ -339,21 +356,19 @@ def serve_async(cfg, fed, train_ds, test_ds, client_indices,
         payload, _ = bcaster.payload_for(cid, server.broadcast_state, gen)
         if transport.send(cid, xport.KIND_BCAST, gen, payload):
             history["downloaded_cum"] += len(payload)
+            if obs.enabled():
+                federation._count_payload("downlink", payload, client=cid)
             inflight[cid] = gen
         else:
             server.record_drop(gen, cid)
 
     def record(version):
-        acc = evaluate(ctx.params, server.adapters, test_ds) \
-            if evaluate else float("nan")
-        losses = federation._ordered_losses(pending_losses)
-        history["round"].append(version)
-        history["acc"].append(acc)
-        history["loss"].append(float(np.mean(losses)) if losses
-                               else float("nan"))
-        history["uploaded"].append(history["uploaded_cum"])
-        history["downloaded"].append(history["downloaded_cum"])
-        history["sim_time"].append(time.monotonic() - t0)
+        acc = federation._eval_acc(evaluate, ctx.params, server.adapters,
+                                   test_ds, round_id=version)
+        federation._record_round(
+            history, round_id=version, acc=acc,
+            losses=federation._ordered_losses(pending_losses),
+            sim_time=time.monotonic() - t0)
         pending_losses.clear()
 
     def release_held():
@@ -403,6 +418,8 @@ def serve_async(cfg, fed, train_ds, test_ds, client_indices,
         elif fr.kind == xport.KIND_UPLOAD:
             inflight.pop(cid, None)
             history["uploaded_cum"] += len(fr.payload)
+            if obs.enabled():
+                federation._count_payload("uplink", fr.payload, client=cid)
             flushed = server.receive(
                 ClientUpdate(cid, fr.payload, ctx.weights[cid], fr.version,
                              2, arrived_at=time.monotonic() - t0))
@@ -433,6 +450,8 @@ def serve_async(cfg, fed, train_ds, test_ds, client_indices,
             # the bytes travelled, so the history tally must agree with
             # the transport's
             history["uploaded_cum"] += len(fr.payload)
+            if obs.enabled():
+                federation._count_payload("uplink", fr.payload, client=cid)
         if fr is not None and fr.kind == xport.KIND_FETCH:
             transport.send(cid, xport.KIND_DONE, server.version)
     if not history["round"] or history["round"][-1] != server.version:
@@ -446,12 +465,13 @@ def serve_async(cfg, fed, train_ds, test_ds, client_indices,
 
 
 def run_client_async(client_id: int, spec: DataSpec, fed, address: str,
-                     timeout: float = 120.0):
+                     timeout: float = 120.0, obs_dir=None):
     """One async client process: fetch the open generation's broadcast,
     train from it, upload tagged with the generation id, repeat until DONE.
     The server paces the loop — a fetch inside a generation this client
     already fed is held until the generation flushes."""
     check_fleet_config(fed)
+    _client_obs(client_id, obs_dir)
     cfg, train, _test, parts = spec.build(fed.n_clients)
     ctx, _ = federation.build_session(cfg, fed, train, parts, None)
     state, n_launch = None, 0
@@ -467,9 +487,10 @@ def run_client_async(client_id: int, spec: DataSpec, fed, address: str,
                 state = codec.decode(fr.payload)
             n_launch += 1
             parity = federation._round_parity(fed, n_launch)
-            res = federation._client_update(
-                ctx, state, client_id, parity,
-                federation._enc_seed(fed, gen + 1, client_id))
+            with obs.span("client.round", gen=gen, client=client_id):
+                res = federation._client_update(
+                    ctx, state, client_id, parity,
+                    federation._enc_seed(fed, gen + 1, client_id))
             try:
                 ct.upload(res.payload, gen,
                           meta={"client": client_id, "parity": parity,
@@ -477,6 +498,8 @@ def run_client_async(client_id: int, spec: DataSpec, fed, address: str,
                                 "losses": res.losses})
             except (BrokenPipeError, ConnectionResetError, OSError):
                 break                        # the run ended under us
+    if obs_dir is not None:     # only tear down a session this proc opened
+        obs.disable()
 
 
 # ---------------------------------------------------------------------------
@@ -494,23 +517,34 @@ def default_address(transport: str = "uds") -> str:
 
 
 def launch_fleet(spec: DataSpec, fed, *, transport: str = "uds",
-                 address: str | None = None, timeout: float = 120.0):
+                 address: str | None = None, timeout: float = 120.0,
+                 obs_dir: str | None = None):
     """Fork fed.n_clients client processes (spawn — each re-imports jax
     cleanly) and serve them from this process.  Returns the server history.
     ``fed.server_mode`` picks the protocol: 'sync' (bit-for-bit the
     in-process trajectory) or 'async' (the generation protocol).
 
     ``timeout`` bounds every socket wait on both sides: a hung client makes
-    the server raise TimeoutError instead of eating the CI job budget."""
+    the server raise TimeoutError instead of eating the CI job budget.
+
+    ``obs_dir`` turns on fleet-wide observability: the server and every
+    client process trace into per-process JSONL logs under obs_dir, and on
+    completion the server merges them into one wall-clock-ordered
+    ``trace.jsonl`` + ``trace.chrome.json`` (Perfetto) and writes its
+    metrics exposition (``metrics.prom`` / ``metrics.json``)."""
     check_fleet_config(fed)
     if address is None:
         address = default_address(transport)
+    if obs_dir is not None:
+        os.makedirs(obs_dir, exist_ok=True)
+        obs.configure(proc="server",
+                      jsonl=os.path.join(obs_dir, "server.jsonl"))
     serve_fn, client_fn = (serve, run_client) if fed.server_mode == "sync" \
         else (serve_async, run_client_async)
     mp = multiprocessing.get_context("spawn")
     st = xport.ServerTransport(address, timeout=timeout)
     procs = [mp.Process(target=client_fn,
-                        args=(k, spec, fed, st.address, timeout),
+                        args=(k, spec, fed, st.address, timeout, obs_dir),
                         daemon=True)
              for k in range(fed.n_clients)]
     try:
@@ -520,6 +554,8 @@ def launch_fleet(spec: DataSpec, fed, *, transport: str = "uds",
         history = serve_fn(cfg, fed, train, test, parts, st)
         for p in procs:
             p.join(timeout=timeout)
+        if obs_dir is not None:
+            history["obs"] = _export_fleet_obs(obs_dir, fed.n_clients)
         return history
     finally:
         st.close()
@@ -527,3 +563,26 @@ def launch_fleet(spec: DataSpec, fed, *, transport: str = "uds",
             if p.is_alive():
                 p.terminate()
                 p.join(timeout=5)
+        if obs_dir is not None:
+            obs.disable()
+
+
+def _export_fleet_obs(obs_dir: str, n_clients: int) -> dict:
+    """Merge the per-process JSONL logs into one ordered trace and write
+    the server's metric exposition.  Missing client logs (a process killed
+    before its first event) are skipped by merge_jsonl."""
+    from repro.obs import export
+    logs = [os.path.join(obs_dir, "server.jsonl")] + \
+           [os.path.join(obs_dir, f"client_{k}.jsonl")
+            for k in range(n_clients)]
+    paths = {"trace.jsonl": os.path.join(obs_dir, "trace.jsonl"),
+             "trace.chrome.json": os.path.join(obs_dir, "trace.chrome.json")}
+    events = export.merge_jsonl(logs, paths["trace.jsonl"])
+    export.write_chrome_trace(events, paths["trace.chrome.json"])
+    if obs.registry() is not None:
+        paths["metrics.prom"] = os.path.join(obs_dir, "metrics.prom")
+        export.write_prometheus(obs.registry(), paths["metrics.prom"])
+        paths["metrics.json"] = os.path.join(obs_dir, "metrics.json")
+        with open(paths["metrics.json"], "w", encoding="utf-8") as f:
+            json.dump(obs.registry().snapshot(), f, indent=1)
+    return paths

@@ -17,6 +17,7 @@ import json
 
 from repro.configs.base import get_config
 from repro.launch import dryrun
+from repro.obs import log
 
 # ---------------------------------------------------------------------------
 # iteration definitions: (name, hypothesis, cfg_patch, build_kwargs)
@@ -140,7 +141,7 @@ def run_pair(pair_name, out_dir="artifacts/hillclimb"):
                                base.get("tpu_temp_estimate_bytes")}
 
     for name, hypothesis, cfg_patch, build_kwargs in spec["iterations"]:
-        print(f"\n=== {pair_name} / {name} ===\n{hypothesis}\n")
+        log.info(f"\n=== {pair_name} / {name} ===\n{hypothesis}\n")
         cfg = get_config(arch)
         if cfg_patch:
             cfg = dataclasses.replace(cfg, **cfg_patch)
@@ -158,7 +159,7 @@ def run_pair(pair_name, out_dir="artifacts/hillclimb"):
         d0, d1 = base["derived"], rec["derived"]
         delta = {k: (d1[k] / d0[k] if d0.get(k) else None)
                  for k in ("flops", "bytes", "collective_bytes")}
-        print(f"  ratios vs baseline: {delta}")
+        log.info(f"  ratios vs baseline: {delta}")
         results["iterations"].append({
             "name": name, "hypothesis": hypothesis,
             "cfg_patch": {k: str(v) for k, v in cfg_patch.items()},

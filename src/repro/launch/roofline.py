@@ -23,6 +23,7 @@ import argparse
 import glob
 import json
 import os
+from repro.obs import log
 
 PEAK_FLOPS = 197e12   # bf16 / chip
 HBM_BW = 819e9        # bytes/s / chip
@@ -140,16 +141,16 @@ def main():
     rows.sort(key=lambda r: (r["arch"], r["shape"]))
     hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
            "| MODEL/HLO flops | HBM args+temp (TPU est, GiB) |")
-    print(hdr)
-    print("|" + "---|" * 8)
+    log.info(hdr)
+    log.info("|" + "---|" * 8)
     for r in rows:
-        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
-              f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
-              f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
-              f"| {r['hbm_args_gib']:.1f}+{r['hbm_temp_tpu_est_gib']:.1f} |")
+        log.info(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+                 f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+                 f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+                 f"| {r['hbm_args_gib']:.1f}+{r['hbm_temp_tpu_est_gib']:.1f} |")
     with open(args.out, "w") as f:
         json.dump(rows, f, indent=1)
-    print(f"\nwrote {args.out} ({len(rows)} rows)")
+    log.info(f"\nwrote {args.out} ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

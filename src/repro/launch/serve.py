@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.configs.base import get_config
 from repro.core import lora
 from repro.models import model as M
+from repro.obs import log
 
 
 def generate(cfg, params, adapters, prompt_tokens, *, gen_len, rank,
@@ -83,9 +84,9 @@ def main():
     toks = generate(cfg, params, adapters, prompts, gen_len=args.gen,
                     rank=args.rank, temperature=args.temperature)
     dt = time.time() - t0
-    print(f"generated {toks.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
-    print(toks[0])
+    log.info(f"generated {toks.shape} in {dt:.2f}s "
+             f"({args.batch * args.gen / dt:.1f} tok/s)")
+    log.info(str(toks[0]))
 
 
 if __name__ == "__main__":

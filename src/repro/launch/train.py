@@ -18,11 +18,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import get_config
 from repro.core import lora, selection
 from repro.core.federation import FedConfig, run_federated
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import make_classification, make_lm_stream
+from repro.obs import log
 
 
 def train_lm_federated(cfg, *, rounds, n_clients, rank, global_rank,
@@ -66,12 +68,18 @@ def main():
     ap.add_argument("--step-time", default="0.01",
                     help="simulated seconds per local step, or 'auto' to "
                          "calibrate from the roofline model")
+    ap.add_argument("--obs-dir", default=None,
+                    help="enable observability and export the run's trace "
+                         "(JSONL + Perfetto) and metrics (Prometheus text) "
+                         "into this directory")
     args = ap.parse_args()
     step_time = "auto" if args.step_time == "auto" else float(args.step_time)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.obs_dir is not None:
+        obs.configure(proc="train")
 
     t0 = time.time()
     if cfg.is_encoder:
@@ -88,7 +96,7 @@ def main():
                         executor=args.executor, step_time_s=step_time)
         hist = run_federated(cfg, fed, train, test, parts)
         for r, acc, up in zip(hist["round"], hist["acc"], hist["uploaded"]):
-            print(f"round {r:3d}  acc {acc:.4f}  uploaded {up:.3e}")
+            log.info(f"round {r:3d}  acc {acc:.4f}  uploaded {up:.3e}")
     else:
         hist = train_lm_federated(
             cfg, rounds=args.rounds, n_clients=args.clients,
@@ -97,8 +105,13 @@ def main():
             seed=args.seed, method=args.method, executor=args.executor,
             step_time_s=step_time)
         for r, loss, up in zip(hist["round"], hist["loss"], hist["uploaded"]):
-            print(f"round {r:3d}  loss {loss:.4f}  uploaded {up:.3e}")
-    print(f"done in {time.time()-t0:.1f}s")
+            log.info(f"round {r:3d}  loss {loss:.4f}  uploaded {up:.3e}")
+    log.info(f"done in {time.time()-t0:.1f}s")
+    if args.obs_dir is not None:
+        paths = obs.export_dir(args.obs_dir)
+        log.info(f"obs artifacts: {', '.join(sorted(paths))} -> "
+                 f"{args.obs_dir}")
+        obs.disable()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,194 @@
+"""Exporters: JSONL event logs, Prometheus text exposition, Chrome trace.
+
+Three formats, one source of truth (the ``Tracer`` buffer / per-process
+JSONL files):
+
+    JSONL        one event per line (``Event.to_dict``) — the merge format
+                 fleet client processes write incrementally and the server
+                 folds into one ordered trace (``merge_jsonl``).
+    Prometheus   text exposition of a ``Registry`` (``prometheus_text``) —
+                 counters/gauges as plain samples, histograms as
+                 cumulative ``_bucket{le=...}`` + ``_sum`` + ``_count``.
+    Chrome trace the ``traceEvents`` JSON Perfetto and chrome://tracing
+                 open directly (``chrome_trace``): each proc is a pid,
+                 each client a tid track (server-scoped events land on
+                 tid 0), spans are complete ``ph='X'`` events, counter
+                 samples become ``ph='C'`` tracks.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterable, List, Optional, Sequence
+
+from repro.obs.metrics import HISTOGRAM, Registry
+from repro.obs.trace import PH_COUNTER, PH_SPAN, Event
+
+# ---------------------------------------------------------------------------
+# JSONL
+# ---------------------------------------------------------------------------
+
+
+def write_jsonl(events: Iterable[Event], path: str) -> int:
+    """Write events as one-JSON-object-per-line; returns the line count."""
+    n = 0
+    with open(path, "w", encoding="utf-8") as f:
+        for ev in events:
+            f.write(json.dumps(ev.to_dict(), separators=(",", ":")) + "\n")
+            n += 1
+    return n
+
+
+def read_jsonl(path: str) -> List[Event]:
+    events = []
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                events.append(Event.from_dict(json.loads(line)))
+    return events
+
+
+def merge_jsonl(paths: Sequence[str], out_path: Optional[str] = None,
+                ) -> List[Event]:
+    """Merge per-process JSONL logs into one trace ordered by wall-clock
+    time (ties break by process name, then input order, so the merge is
+    deterministic for fixed inputs).  Missing files are skipped — a fleet
+    client killed before its first event simply contributes nothing."""
+    events = []
+    for path in paths:
+        if os.path.exists(path):
+            events.extend(read_jsonl(path))
+    events.sort(key=lambda e: (e.t_wall, e.proc))
+    if out_path is not None:
+        write_jsonl(events, out_path)
+    return events
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition
+# ---------------------------------------------------------------------------
+
+
+def _fmt_labels(labels: dict) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
+
+
+def _fmt_value(v) -> str:
+    f = float(v)
+    return str(int(f)) if f == int(f) else repr(f)
+
+
+def prometheus_text(registry: Registry) -> str:
+    """Prometheus text-format exposition of every family in the registry."""
+    lines = []
+    for name, fam in sorted(registry.families.items()):
+        if fam.help:
+            lines.append(f"# HELP {name} {fam.help}")
+        lines.append(f"# TYPE {name} {fam.kind}")
+        for key, s in sorted(fam.series.items()):
+            labels = dict(key)
+            if fam.kind == HISTOGRAM:
+                cum = 0
+                for bound, n in zip(fam.bounds, s.buckets):
+                    cum += n
+                    lines.append(
+                        f"{name}_bucket"
+                        f"{_fmt_labels({**labels, 'le': _fmt_value(bound)})}"
+                        f" {cum}")
+                lines.append(
+                    f"{name}_bucket{_fmt_labels({**labels, 'le': '+Inf'})}"
+                    f" {s.count}")
+                lines.append(f"{name}_sum{_fmt_labels(labels)} "
+                             f"{_fmt_value(s.sum)}")
+                lines.append(f"{name}_count{_fmt_labels(labels)} {s.count}")
+            else:
+                lines.append(f"{name}{_fmt_labels(labels)} "
+                             f"{_fmt_value(s.value)}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def write_prometheus(registry: Registry, path: str) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        f.write(prometheus_text(registry))
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace-event JSON (Perfetto / chrome://tracing)
+# ---------------------------------------------------------------------------
+
+
+def chrome_trace(events: Sequence[Event]) -> dict:
+    """Convert events to the Chrome trace-event JSON object format.
+
+    Track mapping: ``pid`` is the emitting process (server / client-k /
+    main), ``tid`` is the client id where the event is client-scoped —
+    so per-client work renders as parallel tracks under each process —
+    and 0 for process-scoped events.  Timestamps are microseconds
+    relative to the earliest event (Perfetto's expected scale)."""
+    if not events:
+        return {"traceEvents": [], "displayTimeUnit": "ms"}
+    t0 = min(e.t_wall for e in events)
+    procs = sorted({e.proc for e in events})
+    pid_of = {p: i + 1 for i, p in enumerate(procs)}
+    out = []
+    for p, pid in pid_of.items():
+        out.append({"ph": "M", "name": "process_name", "pid": pid, "tid": 0,
+                    "args": {"name": p}})
+    named_tids = set()
+    for e in events:
+        pid = pid_of[e.proc]
+        tid = 0 if e.client is None else int(e.client) + 1
+        if tid and (pid, tid) not in named_tids:
+            named_tids.add((pid, tid))
+            out.append({"ph": "M", "name": "thread_name", "pid": pid,
+                        "tid": tid, "args": {"name": f"client {e.client}"}})
+        ts = (e.t_wall - t0) * 1e6
+        args = dict(e.attrs or {})
+        for k in ("round", "gen", "t_sim"):
+            v = getattr(e, k)
+            if v is not None:
+                args[k] = v
+        if e.ph == PH_SPAN:
+            out.append({"ph": "X", "name": e.name, "pid": pid, "tid": tid,
+                        "ts": ts, "dur": (e.dur or 0.0) * 1e6, "args": args})
+        elif e.ph == PH_COUNTER:
+            out.append({"ph": "C", "name": e.name, "pid": pid, "tid": tid,
+                        "ts": ts,
+                        "args": {"value": args.get("value", 0.0)}})
+        else:
+            out.append({"ph": "i", "name": e.name, "pid": pid, "tid": tid,
+                        "ts": ts, "s": "t", "args": args})
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(events: Sequence[Event], path: str) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(chrome_trace(events), f, separators=(",", ":"))
+
+
+# ---------------------------------------------------------------------------
+# one-call run export
+# ---------------------------------------------------------------------------
+
+
+def export_run(out_dir: str, events: Sequence[Event],
+               registry: Optional[Registry] = None) -> dict:
+    """Write the standard artifact set for one run into ``out_dir``:
+    trace.jsonl, trace.chrome.json, and (with a registry) metrics.prom +
+    metrics.json.  Returns {artifact name: path}."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = {"trace.jsonl": os.path.join(out_dir, "trace.jsonl"),
+             "trace.chrome.json": os.path.join(out_dir, "trace.chrome.json")}
+    write_jsonl(events, paths["trace.jsonl"])
+    write_chrome_trace(events, paths["trace.chrome.json"])
+    if registry is not None:
+        paths["metrics.prom"] = os.path.join(out_dir, "metrics.prom")
+        paths["metrics.json"] = os.path.join(out_dir, "metrics.json")
+        write_prometheus(registry, paths["metrics.prom"])
+        with open(paths["metrics.json"], "w", encoding="utf-8") as f:
+            json.dump(registry.snapshot(), f, indent=1)
+    return paths

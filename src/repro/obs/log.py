@@ -1,0 +1,62 @@
+"""One leveled logger for the whole repo's human-facing output.
+
+Replaces the bare ``print()`` calls scattered through ``repro.launch`` and
+the benchmark drivers.  Messages print *unformatted* — ``info`` to stdout,
+``warning``/``error`` to stderr — so existing output contracts (the
+benchmark harness's ``name,us_per_call,derived`` CSV lines, the CI smoke
+jobs' greps) are byte-stable; leveling only adds the ability to silence
+(``REPRO_LOG_LEVEL=warning``) or amplify (``=debug``) without touching
+call sites.  When tracing is enabled, every emitted line is mirrored into
+the trace buffer as a ``log`` event, so a run's trace carries its own
+console narrative.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+DEBUG, INFO, WARNING, ERROR = 10, 20, 30, 40
+_NAMES = {"debug": DEBUG, "info": INFO, "warning": WARNING, "error": ERROR}
+
+_level = _NAMES.get(os.environ.get("REPRO_LOG_LEVEL", "info").lower(), INFO)
+
+
+def set_level(name: str) -> None:
+    global _level
+    if name.lower() not in _NAMES:
+        raise ValueError(f"unknown log level {name!r}; want one of "
+                         f"{sorted(_NAMES)}")
+    _level = _NAMES[name.lower()]
+
+
+def level() -> int:
+    return _level
+
+
+def _emit(lvl: int, lvl_name: str, msg: str) -> None:
+    if lvl < _level:
+        return
+    stream = sys.stderr if lvl >= WARNING else sys.stdout
+    print(msg, file=stream)
+    # mirror into the trace when one is active (import here: obs imports
+    # log, not the other way round, so the hot path stays import-cycle-free)
+    from repro import obs
+    t = obs.tracer()
+    if t is not None:
+        t.instant("log", level=lvl_name, msg=msg)
+
+
+def debug(msg: str) -> None:
+    _emit(DEBUG, "debug", msg)
+
+
+def info(msg: str) -> None:
+    _emit(INFO, "info", msg)
+
+
+def warning(msg: str) -> None:
+    _emit(WARNING, "warning", msg)
+
+
+def error(msg: str) -> None:
+    _emit(ERROR, "error", msg)

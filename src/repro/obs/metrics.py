@@ -1,0 +1,171 @@
+"""Counter/gauge/histogram registry for the federation stack.
+
+A ``Registry`` holds metric *families* (one per name); each family holds
+labeled *series* (one per label combination).  The registry is the
+numeric twin of the trace buffer: traces answer "what happened when",
+metrics answer "how much, in total" — and the totals are **cross-checked
+against the existing byte ledger**: tests/test_obs.py asserts that
+``fed_uplink_bytes_total`` / ``fed_downlink_bytes_total`` reconcile
+exactly with ``history["uploaded_cum"/"downloaded_cum"]`` and the
+transport's ``traffic()`` tallies, and the wire-level counters
+(``wire_*``) mirror ``ServerTransport``'s accounting increment for
+increment.  Observability must not fork the truth.
+
+Like the tracer, the registry is only touched through the no-op-safe
+helpers in ``obs/__init__.py`` — disabled runs never construct one.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+COUNTER = "counter"
+GAUGE = "gauge"
+HISTOGRAM = "histogram"
+
+# default histogram buckets: wide log-ish spread that covers staleness
+# (integers near 0), padding-waste fractions, and second-scale durations
+DEFAULT_BUCKETS = (0.0, 0.001, 0.005, 0.01, 0.05, 0.1, 0.25, 0.5, 1.0,
+                   2.5, 5.0, 10.0, 25.0, 50.0, 100.0)
+
+
+def _label_key(labels: dict) -> Tuple[Tuple[str, str], ...]:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+class _Series:
+    __slots__ = ("value", "count", "sum", "buckets")
+
+    def __init__(self, kind: str, bounds):
+        self.value = 0.0
+        self.count = 0
+        self.sum = 0.0
+        self.buckets = [0] * len(bounds) if kind == HISTOGRAM else None
+
+
+class Family:
+    """One named metric and its labeled series."""
+
+    def __init__(self, name: str, kind: str, help: str = "",
+                 buckets: Optional[Sequence[float]] = None):
+        self.name = name
+        self.kind = kind
+        self.help = help
+        self.bounds = tuple(buckets) if kind == HISTOGRAM else ()
+        self.series: Dict[tuple, _Series] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, labels: dict) -> _Series:
+        key = _label_key(labels)
+        s = self.series.get(key)
+        if s is None:
+            with self._lock:
+                s = self.series.setdefault(key, _Series(self.kind,
+                                                        self.bounds))
+        return s
+
+    def inc(self, value: float = 1.0, **labels) -> None:
+        if self.kind != COUNTER:
+            raise TypeError(f"{self.name} is a {self.kind}, not a counter")
+        if value < 0:
+            raise ValueError("counters only go up")
+        s = self._get(labels)
+        with self._lock:
+            s.value += value
+            s.count += 1
+
+    def set(self, value: float, **labels) -> None:
+        if self.kind != GAUGE:
+            raise TypeError(f"{self.name} is a {self.kind}, not a gauge")
+        s = self._get(labels)
+        with self._lock:
+            s.value = float(value)
+            s.count += 1
+
+    def observe(self, value: float, **labels) -> None:
+        if self.kind != HISTOGRAM:
+            raise TypeError(f"{self.name} is a {self.kind}, not a histogram")
+        s = self._get(labels)
+        with self._lock:
+            s.count += 1
+            s.sum += float(value)
+            for i, b in enumerate(self.bounds):
+                if value <= b:
+                    s.buckets[i] += 1
+                    break
+
+    # -- read side ----------------------------------------------------------
+
+    def value_of(self, **labels) -> float:
+        s = self.series.get(_label_key(labels))
+        return s.value if s is not None else 0.0
+
+    def total(self) -> float:
+        """Sum of every labeled series (counters/gauges) — the number the
+        reconciliation tests compare against the byte ledger."""
+        if self.kind == HISTOGRAM:
+            return sum(s.sum for s in self.series.values())
+        return sum(s.value for s in self.series.values())
+
+
+class Registry:
+    """Process-wide metric store.  ``counter``/``gauge``/``histogram`` are
+    get-or-create by name; re-declaring with a different kind is an error
+    (one name, one truth)."""
+
+    def __init__(self):
+        self.families: Dict[str, Family] = {}
+        self._lock = threading.Lock()
+
+    def _family(self, name: str, kind: str, help: str,
+                buckets=None) -> Family:
+        fam = self.families.get(name)
+        if fam is None:
+            with self._lock:
+                fam = self.families.get(name)
+                if fam is None:
+                    fam = Family(name, kind, help,
+                                 buckets or DEFAULT_BUCKETS)
+                    self.families[name] = fam
+        if fam.kind != kind:
+            raise TypeError(f"metric {name!r} already registered as "
+                            f"{fam.kind}, not {kind}")
+        return fam
+
+    def counter(self, name: str, help: str = "") -> Family:
+        return self._family(name, COUNTER, help)
+
+    def gauge(self, name: str, help: str = "") -> Family:
+        return self._family(name, GAUGE, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: Optional[Sequence[float]] = None) -> Family:
+        return self._family(name, HISTOGRAM, help, buckets)
+
+    # -- read side ----------------------------------------------------------
+
+    def total(self, name: str) -> float:
+        fam = self.families.get(name)
+        return fam.total() if fam is not None else 0.0
+
+    def value(self, name: str, **labels) -> float:
+        fam = self.families.get(name)
+        return fam.value_of(**labels) if fam is not None else 0.0
+
+    def snapshot(self) -> dict:
+        """Plain-dict dump (JSON-serializable) of every family's series —
+        the shape the fleet ships server-side and artifacts embed."""
+        out = {}
+        for name, fam in sorted(self.families.items()):
+            series = []
+            for key, s in sorted(fam.series.items()):
+                row = {"labels": dict(key), "value": s.value,
+                       "count": s.count}
+                if fam.kind == HISTOGRAM:
+                    row["sum"] = s.sum
+                    row["buckets"] = dict(zip(map(str, fam.bounds),
+                                              s.buckets))
+                series.append(row)
+            out[name] = {"type": fam.kind, "help": fam.help,
+                         "series": series}
+        return out

@@ -1,0 +1,164 @@
+"""Structured span/event recorder for the federation stack.
+
+One ``Event`` is one observation — a span (``ph='X'``, with a wall-clock
+duration), an instant (``ph='i'``), or a counter sample (``ph='C'``) —
+keyed by round/generation/client and stamped with both wall-clock time
+(``t_wall``, unix seconds) and, where the caller has one, the simulated
+clock (``t_sim``).  The ``Tracer`` holds events in a bounded ring buffer
+(old events fall off the front; ``n_dropped`` counts them) and can mirror
+every event into a sink — the incremental JSONL writer fleet client
+processes use, so a killed process still leaves its events on disk.
+
+The recorder is designed to be a **true no-op when disabled**: nothing in
+this module is consulted on the hot path unless ``repro.obs`` has an
+active tracer (the module-level helpers in ``obs/__init__.py`` check one
+``is None`` and return), instrumentation only *reads* engine values —
+never the shared rng, never a jax computation — and the differential test
+(tests/test_obs.py) proves obs-enabled trajectories are bit-identical to
+obs-disabled ones.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import threading
+import time
+from collections import deque
+from typing import Optional
+
+PH_SPAN = "X"       # complete span: t_wall = start, dur = seconds
+PH_INSTANT = "i"    # point event
+PH_COUNTER = "C"    # counter sample (value in attrs["value"])
+
+
+@dataclasses.dataclass
+class Event:
+    """One trace record.  ``round`` is the sync round id, ``gen`` the async
+    generation id (one of them is usually set, never both), ``client`` the
+    client id where the event is client-scoped.  ``attrs`` carries
+    event-specific payload (sizes, kinds, waste fractions, ...)."""
+    name: str
+    ph: str = PH_INSTANT
+    t_wall: float = 0.0
+    dur: Optional[float] = None
+    t_sim: Optional[float] = None
+    round: Optional[int] = None
+    gen: Optional[int] = None
+    client: Optional[int] = None
+    proc: str = "main"
+    attrs: Optional[dict] = None
+
+    def to_dict(self) -> dict:
+        d = {"name": self.name, "ph": self.ph, "t_wall": self.t_wall,
+             "proc": self.proc}
+        for k in ("dur", "t_sim", "round", "gen", "client"):
+            v = getattr(self, k)
+            if v is not None:
+                d[k] = v
+        if self.attrs:
+            d["attrs"] = self.attrs
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Event":
+        return cls(name=d["name"], ph=d.get("ph", PH_INSTANT),
+                   t_wall=d.get("t_wall", 0.0), dur=d.get("dur"),
+                   t_sim=d.get("t_sim"), round=d.get("round"),
+                   gen=d.get("gen"), client=d.get("client"),
+                   proc=d.get("proc", "main"), attrs=d.get("attrs"))
+
+
+class JsonlSink:
+    """Append-mode incremental JSONL writer: one event per line, flushed
+    per write, so a process killed mid-run still leaves a usable log (the
+    fleet's per-client trace files rely on this)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "a", encoding="utf-8")
+        self._lock = threading.Lock()
+
+    def write(self, event: Event) -> None:
+        line = json.dumps(event.to_dict(), separators=(",", ":"))
+        with self._lock:
+            self._f.write(line + "\n")
+            self._f.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._f.closed:
+                self._f.close()
+
+
+class Tracer:
+    """Ring-buffered event recorder.  Thread-safe for concurrent emits
+    (deque appends are atomic; the sink serializes its own writes)."""
+
+    def __init__(self, *, capacity: int = 1 << 16, proc: str = "main",
+                 sink: Optional[JsonlSink] = None):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.proc = proc
+        self.sink = sink
+        self.buf: deque = deque(maxlen=capacity)
+        self.n_emitted = 0          # total events ever emitted
+
+    @property
+    def n_dropped(self) -> int:
+        """Events that fell off the ring (still in the sink, if any)."""
+        return self.n_emitted - len(self.buf)
+
+    def emit(self, event: Event) -> None:
+        self.n_emitted += 1
+        self.buf.append(event)
+        if self.sink is not None:
+            self.sink.write(event)
+
+    # -- convenience constructors ------------------------------------------
+
+    def instant(self, name: str, *, t_sim=None, round=None, gen=None,
+                client=None, **attrs) -> None:
+        self.emit(Event(name, PH_INSTANT, time.time(), None, t_sim, round,
+                        gen, client, self.proc, attrs or None))
+
+    def counter(self, name: str, value: float, *, t_sim=None, round=None,
+                gen=None, client=None, **attrs) -> None:
+        a = dict(attrs)
+        a["value"] = value
+        self.emit(Event(name, PH_COUNTER, time.time(), None, t_sim, round,
+                        gen, client, self.proc, a))
+
+    @contextlib.contextmanager
+    def span(self, name: str, *, t_sim=None, round=None, gen=None,
+             client=None, **attrs):
+        """Complete-span context manager: one event on exit, ``t_wall`` the
+        entry time and ``dur`` the measured wall duration.  The attrs dict
+        is live inside the block — callers may add keys discovered mid-span
+        (bucket shapes, flush sizes) and they land on the event."""
+        a = dict(attrs)
+        t0_wall = time.time()
+        t0 = time.perf_counter()
+        try:
+            yield a
+        finally:
+            self.emit(Event(name, PH_SPAN, t0_wall,
+                            time.perf_counter() - t0, t_sim, round, gen,
+                            client, self.proc, a or None))
+
+    # -- access -------------------------------------------------------------
+
+    def events(self, name: Optional[str] = None) -> list:
+        """Snapshot of buffered events, optionally filtered by name."""
+        evs = list(self.buf)
+        if name is not None:
+            evs = [e for e in evs if e.name == name]
+        return evs
+
+    def clear(self) -> None:
+        self.buf.clear()
+
+    def close(self) -> None:
+        if self.sink is not None:
+            self.sink.close()

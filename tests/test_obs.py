@@ -1,0 +1,334 @@
+"""repro.obs acceptance: the observability layer observes, never perturbs.
+
+Three groups of coverage:
+
+1. Unit — tracer ring buffer / span semantics, metric kinds, exporters
+   (JSONL round-trip + deterministic merge, Prometheus text exposition
+   with cumulative histogram buckets, Chrome trace-event structure).
+2. Differential (the parity gate) — an obs-enabled fp32 run is
+   **bit-identical** to the obs-disabled run: same eval history, same
+   byte ledger, bit-equal final adapters.  Fast subset here; the full
+   5-method x 2-executor x sync/async matrix is @slow.
+3. Reconciliation (the cross-check gate) — metric totals must equal the
+   engine's own ``history`` byte ledger exactly, and the codec section
+   counters must sum to the full payload totals.  Observability is a
+   read-only mirror of the books, not a second set of them.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import obs
+from repro.configs.base import get_config
+from repro.core.federation import FedConfig, run_federated
+from repro.obs import export
+from repro.obs.metrics import Registry
+from repro.obs.trace import Event, JsonlSink, Tracer
+
+CFG = get_config("roberta-sim")
+
+
+@pytest.fixture(autouse=True)
+def _obs_clean():
+    """Every test starts and ends with obs disabled, even on failure —
+    the rest of the suite must keep exercising the no-op path."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+# ---------------------------------------------------------------------------
+# 1. unit: tracer, metrics, exporters
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_is_true_noop():
+    assert not obs.enabled()
+    assert obs.tracer() is None and obs.registry() is None
+    # every helper is callable and records nothing
+    obs.event("x", round=1, foo="bar")
+    obs.count("c", 5, label="a")
+    obs.observe("h", 0.5)
+    obs.set_gauge("g", 1.0)
+    with obs.span("s", round=1) as a:
+        a["k"] = "v"            # writes into the discard dict
+        a.update(other=1)
+    assert obs.export_dir("/tmp/never-created-by-test-obs") == {}
+    assert not obs.enabled()
+
+
+def test_configure_records_and_disable_reverts():
+    obs.configure(proc="t")
+    obs.event("e1", round=3, client=2, size=10)
+    obs.count("c1", 2.5, kind="a")
+    obs.count("c1", 1.5, kind="b")
+    with obs.span("s1", gen=1) as a:
+        a["n"] = 7
+    t, r = obs.tracer(), obs.registry()
+    (e1,) = t.events("e1")
+    assert (e1.round, e1.client, e1.attrs) == (3, 2, {"size": 10})
+    (s1,) = t.events("s1")
+    assert s1.ph == "X" and s1.gen == 1 and s1.attrs == {"n": 7}
+    assert s1.dur >= 0.0
+    assert r.total("c1") == 4.0
+    assert r.value("c1", kind="a") == 2.5
+    obs.disable()
+    assert obs.tracer() is None and obs.registry() is None
+
+
+def test_tracer_ring_buffer_bounds_memory():
+    t = Tracer(capacity=8, proc="t")
+    for i in range(20):
+        t.instant("e", i=i)
+    assert len(t.buf) == 8
+    assert t.n_emitted == 20 and t.n_dropped == 12
+    # the *newest* events survive
+    assert [e.attrs["i"] for e in t.events()] == list(range(12, 20))
+
+
+def test_event_dict_roundtrip_omits_none():
+    e = Event("n", t_wall=1.5, round=2, proc="p", attrs={"a": 1})
+    d = e.to_dict()
+    assert "gen" not in d and "client" not in d and "dur" not in d
+    assert Event.from_dict(d) == e
+
+
+def test_jsonl_sink_and_merge_order(tmp_path):
+    # two "processes" write interleaved wall-clock times; the merge is
+    # globally ordered and deterministic (ties break by proc name)
+    pa, pb = str(tmp_path / "a.jsonl"), str(tmp_path / "b.jsonl")
+    ta = Tracer(proc="a", sink=JsonlSink(pa))
+    tb = Tracer(proc="b", sink=JsonlSink(pb))
+    for i, tr in enumerate([ta, tb, ta, tb]):
+        tr.emit(Event("e", t_wall=float(i // 2), proc=tr.proc,
+                      attrs={"i": i}))
+    ta.close(), tb.close()
+    merged = export.merge_jsonl(
+        [pa, pb, str(tmp_path / "missing.jsonl")],   # missing is skipped
+        str(tmp_path / "merged.jsonl"))
+    assert [(e.t_wall, e.proc) for e in merged] == \
+        [(0.0, "a"), (0.0, "b"), (1.0, "a"), (1.0, "b")]
+    assert export.read_jsonl(str(tmp_path / "merged.jsonl")) == merged
+
+
+def test_metric_kind_conflicts_and_counter_monotonicity():
+    r = Registry()
+    r.counter("x").inc(1)
+    with pytest.raises(TypeError):
+        r.gauge("x")
+    with pytest.raises(ValueError):
+        r.counter("x").inc(-1)
+    with pytest.raises(TypeError):
+        r.counter("x").set(2.0)
+    r.gauge("g").set(5.0)
+    r.gauge("g").set(2.0)           # gauges move both ways
+    assert r.value("g") == 2.0
+
+
+def test_prometheus_histogram_exposition_is_cumulative():
+    r = Registry()
+    h = r.histogram("lat", "help text", buckets=(0.1, 1.0, 10.0))
+    for v in (0.05, 0.5, 2.0, 500.0):
+        h.observe(v)
+    text = export.prometheus_text(r)
+    assert "# HELP lat help text" in text
+    assert "# TYPE lat histogram" in text
+    assert 'lat_bucket{le="0.1"} 1' in text
+    assert 'lat_bucket{le="1"} 2' in text        # cumulative, not per-bucket
+    assert 'lat_bucket{le="10"} 3' in text
+    assert 'lat_bucket{le="+Inf"} 4' in text     # includes the overflow obs
+    assert "lat_sum 502.55" in text
+    assert "lat_count 4" in text
+
+
+def test_prometheus_counter_labels_sorted_and_ints_plain():
+    r = Registry()
+    r.counter("c").inc(3, zeta="z", alpha="a")
+    text = export.prometheus_text(r)
+    assert 'c{alpha="a",zeta="z"} 3' in text     # sorted labels, int plain
+
+
+def test_chrome_trace_tracks_and_timebase():
+    evs = [Event("cohort", ph="X", t_wall=10.0, dur=0.5, proc="server"),
+           Event("step", ph="i", t_wall=10.25, client=3, proc="client-3"),
+           Event("bytes", ph="C", t_wall=10.5, proc="server",
+                 attrs={"value": 42})]
+    doc = export.chrome_trace(evs)
+    out = doc["traceEvents"]
+    meta = [e for e in out if e["ph"] == "M"]
+    names = {(m["name"], m["args"]["name"]) for m in meta}
+    assert ("process_name", "server") in names
+    assert ("process_name", "client-3") in names
+    assert ("thread_name", "client 3") in names
+    span = next(e for e in out if e["ph"] == "X")
+    assert span["ts"] == 0.0 and span["dur"] == pytest.approx(5e5)
+    inst = next(e for e in out if e["ph"] == "i")
+    assert inst["ts"] == pytest.approx(2.5e5)    # relative microseconds
+    assert inst["tid"] == 4                      # client 3 -> tid 4
+    ctr = next(e for e in out if e["ph"] == "C")
+    assert ctr["args"] == {"value": 42}
+    assert export.chrome_trace([]) == {"traceEvents": [],
+                                       "displayTimeUnit": "ms"}
+
+
+def test_export_dir_writes_artifact_set(tmp_path):
+    obs.configure(proc="t")
+    obs.event("e")
+    obs.count("c", 1)
+    paths = obs.export_dir(str(tmp_path))
+    assert sorted(paths) == ["metrics.json", "metrics.prom",
+                             "trace.chrome.json", "trace.jsonl"]
+    assert len(export.read_jsonl(paths["trace.jsonl"])) == 1
+    doc = json.load(open(paths["trace.chrome.json"]))
+    assert doc["traceEvents"]
+    snap = json.load(open(paths["metrics.json"]))
+    assert snap["c"]["type"] == "counter"
+    assert "c 1" in open(paths["metrics.prom"]).read()
+
+
+# ---------------------------------------------------------------------------
+# 2+3. differential parity and ledger reconciliation
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def data():
+    from repro.data.partition import dirichlet_partition
+    from repro.data.synthetic import make_classification
+    train, test = make_classification(0, n_classes=8, vocab=CFG.vocab_size,
+                                      seq_len=16, n_train=480, n_test=160)
+    parts = dirichlet_partition(0, train.labels, 4, alpha=0.5)
+    return train, test, parts
+
+
+def _fed(method, executor, server_mode="sync"):
+    kw = dict(method=method, rank=2, global_rank=4, rounds=2,
+              local_epochs=1, batch_size=32, n_clients=4, eval_every=1,
+              seed=0, executor=executor, server_mode=server_mode,
+              step_time_s=0.01)
+    if server_mode == "async":
+        kw["buffer_size"] = 2
+    if method == "hetlora":
+        kw["client_ranks"] = [1, 2, 2, 4]
+    return FedConfig(**kw)
+
+
+def _assert_bit_identical(h0, h1):
+    assert h0["round"] == h1["round"]
+    assert h0["acc"] == h1["acc"]
+    assert h0["loss"] == h1["loss"] or (
+        np.isnan(h0["loss"]).tolist() == np.isnan(h1["loss"]).tolist()
+        and np.nansum(h0["loss"]) == np.nansum(h1["loss"]))
+    assert h0["uploaded"] == h1["uploaded"]
+    assert h0["downloaded"] == h1["downloaded"]
+    assert h0["sim_time"] == h1["sim_time"]
+    key = "adapters" if "adapters" in h0 else "params"
+    for x, y in zip(jax.tree.leaves(h0[key]), jax.tree.leaves(h1[key])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _assert_ledger_reconciles(reg, hist):
+    """The cross-check gate: metric totals equal the byte ledger exactly,
+    and the per-section codec counters sum to the full payload totals."""
+    assert reg.total("fed_uplink_bytes_total") == hist["uploaded_cum"]
+    assert reg.total("fed_downlink_bytes_total") == hist["downloaded_cum"]
+    for d in ("uplink", "downlink"):
+        assert reg.total(f"fed_{d}_section_bytes_total") == \
+            reg.total(f"fed_{d}_bytes_total")
+
+
+def _differential(fed, data):
+    """Run the same config obs-off then obs-on; return (h_on, registry)."""
+    train, test, parts = data
+    h_off = run_federated(CFG, fed, train, test, parts)
+    obs.configure(proc="test")
+    try:
+        h_on = run_federated(CFG, fed, train, test, parts)
+        reg = obs.registry()
+    finally:
+        obs.disable()
+    _assert_bit_identical(h_off, h_on)
+    _assert_ledger_reconciles(reg, h_on)
+    return h_on, reg
+
+
+def test_obs_run_is_bit_identical_sync_vectorized(data):
+    """Parity gate (fast): lora_a2 sync on the vectorized executor."""
+    h, reg = _differential(_fed("lora_a2", "vectorized"), data)
+    assert reg.total("fed_rounds_total") == 2
+    assert reg.total("fed_evals_total") == 2
+    assert reg.total("executor_compiles_total") > 0
+    # rank-selection histogram saw one upload per client per round
+    fam = reg.families["rank_selected_slots"]
+    assert sum(s.count for s in fam.series.values()) == 8
+
+
+def test_obs_run_is_bit_identical_async_looped(data):
+    """Parity gate (fast): flexlora on the generation-versioned async
+    server — arrival order is simulated-clock deterministic, so the
+    trajectory must still be bit-identical under obs."""
+    h, reg = _differential(_fed("flexlora", "looped", "async"), data)
+    assert reg.total("gen_flushes_total") >= 1
+    assert reg.total("fed_evals_total") == len(h["round"])
+
+
+def test_obs_run_is_bit_identical_full_ft(data):
+    """Parity gate (fast): the dense full_ft track, whose round recording
+    shares _record_round with the adapter paths."""
+    h, reg = _differential(_fed("full_ft", "vectorized"), data)
+    assert reg.total("fed_rounds_total") == 2
+    assert not np.isnan(h["loss"]).any()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ["fl_lora", "ffa_lora", "flexlora",
+                                    "hetlora", "lora_a2"])
+@pytest.mark.parametrize("executor", ["looped", "vectorized"])
+@pytest.mark.parametrize("server_mode", ["sync", "async"])
+def test_obs_parity_full_matrix(data, method, executor, server_mode):
+    """Acceptance: every method on both executors, sync and async, runs
+    bit-for-bit identically with observability enabled, and the exported
+    metrics reconcile exactly with the byte ledger."""
+    _differential(_fed(method, executor, server_mode), data)
+
+
+def test_obs_trace_covers_the_round_lifecycle(data):
+    """The sync trace contains the expected event skeleton with sane keys
+    (every span closed, rounds stamped, byte sizes attached)."""
+    train, test, parts = data
+    obs.configure(proc="test")
+    try:
+        hist = run_federated(CFG, _fed("lora_a2", "vectorized"),
+                             train, test, parts)
+        t = obs.tracer()
+        rounds = t.events("fed.round")
+        assert [e.round for e in rounds] == [1, 2]
+        assert all(e.ph == "X" and e.dur >= 0 for e in rounds)
+        assert all(e.attrs["participants"] == 4 for e in rounds)
+        ups = t.events("fed.upload_built")
+        assert len(ups) == 8 and all(e.attrs["bytes"] > 0 for e in ups)
+        recs = t.events("fed.record")
+        assert [e.attrs["uploaded"] for e in recs] == hist["uploaded"]
+        assert t.events("fed.eval") and t.events("exec.bucket")
+    finally:
+        obs.disable()
+
+
+def test_record_round_empty_losses_is_nan_everywhere():
+    """Satellite: the shared _record_round helper records NaN loss for an
+    empty cohort instead of raising / diverging per code path."""
+    from repro.core import federation
+    hist = {"round": [], "acc": [], "loss": [], "uploaded": [],
+            "downloaded": [], "sim_time": [], "uploaded_cum": 7,
+            "downloaded_cum": 9}
+    loss = federation._record_round(hist, round_id=1, acc=0.5, losses=[],
+                                    sim_time=1.0)
+    assert np.isnan(loss) and np.isnan(hist["loss"][0])
+    assert hist["uploaded"] == [7] and hist["downloaded"] == [9]
+    loss = federation._record_round(hist, round_id=2, acc=0.6,
+                                    losses=[1.0, 3.0], sim_time=2.0)
+    assert loss == 2.0 and hist["round"] == [1, 2]

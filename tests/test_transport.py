@@ -13,6 +13,7 @@ import pytest
 
 import jax
 
+from repro import obs
 from repro.comm import codec, network, server, transport as xport
 from repro.configs.base import get_config
 from repro.core import lora, selection
@@ -25,6 +26,26 @@ CFG = get_config("roberta-sim")
 
 def _uds(tmp_path):
     return f"uds:{tmp_path}/t.sock"
+
+
+@pytest.fixture
+def obs_on():
+    """Enable observability for one test; always disabled on the way out
+    so the rest of the suite keeps exercising the no-op path."""
+    obs.configure(proc="test")
+    yield obs
+    obs.disable()
+
+
+def _wire_sum(reg, name, **match):
+    """Sum a counter family over every series whose labels include
+    ``match`` (labels are stored stringified)."""
+    fam = reg.families.get(name)
+    if fam is None:
+        return 0.0
+    want = {k: str(v) for k, v in match.items()}
+    return sum(s.value for key, s in fam.series.items()
+               if all(dict(key).get(k) == v for k, v in want.items()))
 
 
 # ---------------------------------------------------------------------------
@@ -166,9 +187,11 @@ def test_server_client_roundtrip_and_traffic(addr, tmp_path):
                 __import__("os").path.exists(spec[4:]))  # socket unlinked
 
 
-def test_client_disconnect_mid_upload_is_dropped(tmp_path):
+def test_client_disconnect_mid_upload_is_dropped(tmp_path, obs_on):
     """A client that dies with an upload frame half-sent surfaces once as
-    (cid, None) and is deregistered — the server can proceed without it."""
+    (cid, None) and is deregistered — the server can proceed without it.
+    With obs on, the death shows up as exactly one wire.disconnect event
+    flagged mid_frame, and the wire counters match traffic() exactly."""
     with xport.ServerTransport(_uds(tmp_path), timeout=10) as st:
         raw = socket.socket(socket.AF_UNIX)
         raw.connect(st.address[4:])
@@ -185,6 +208,17 @@ def test_client_disconnect_mid_upload_is_dropped(tmp_path):
         assert (cid, fr) == (0, None)
         assert st.clients == []
         assert not st.send(0, xport.KIND_BCAST, 0, b"x")   # gone is gone
+        tr = st.traffic()
+    disc = obs_on.tracer().events("wire.disconnect")
+    assert len(disc) == 1
+    assert disc[0].client == 0 and disc[0].attrs["mid_frame"] is True
+    reg = obs_on.registry()
+    assert reg.total("wire_disconnects_total") == 1
+    # the truncated upload never completed: counters mirror traffic()
+    assert _wire_sum(reg, "wire_payload_bytes_total",
+                     direction="up") == tr["total_up"] == 0
+    assert _wire_sum(reg, "wire_overhead_bytes_total",
+                     direction="up") == tr["overhead_up"]
 
 
 def test_hello_out_of_range_client_id_raises(tmp_path):
@@ -486,13 +520,16 @@ def test_fast_client_next_round_fetch_is_not_answered_early(tmp_path):
 # ---------------------------------------------------------------------------
 
 
-def test_async_fleet_disconnect_mid_generation_round_proceeds(tmp_path):
+def test_async_fleet_disconnect_mid_generation_round_proceeds(
+        tmp_path, obs_on):
     """Torture (generation protocol): one real async client plus one that
     joins a generation and dies with its upload half-sent.  The server
     records the drop, the stranded generation closes as partial per the
     policy, and the surviving client carries the run to the target version
     with balanced byte accounting — the generation twin of the sync
-    mid-upload-death test above."""
+    mid-upload-death test above.  With obs on, the death must surface as a
+    mid-frame wire.disconnect plus a gen.drop event, and the wire counters
+    must equal ServerTransport.traffic() byte for byte."""
     spec = fleet.DataSpec(n_train=160, n_test=64)
     fed = _fed(method="flexlora", rounds=2, n_clients=2,
                server_mode="async", buffer_size=2)
@@ -536,9 +573,36 @@ def test_async_fleet_disconnect_mid_generation_round_proceeds(tmp_path):
     assert tr["downlink_bytes"][0] > 0 and tr["downlink_bytes"][1] > 0
     assert hist["uploaded_cum"] == tr["total_up"]
     assert hist["downloaded_cum"] == tr["total_down"]
+    # the death is visible in the trace: exactly one *mid-frame* disconnect
+    # (the survivor's own end-of-run close is a clean one), plus one drop
+    disc = obs_on.tracer().events("wire.disconnect")
+    assert [e.client for e in disc if e.attrs["mid_frame"]] == [1]
+    assert obs_on.registry().total("wire_disconnects_total") == len(disc)
+    drops = obs_on.tracer().events("gen.drop")
+    assert len(drops) == 1 and drops[0].client == 1
+    reg = obs_on.registry()
+    assert reg.total("gen_drops_total") == 1
+    # wire counters reconcile with traffic() exactly, per direction and
+    # per client — payload and overhead both
+    assert _wire_sum(reg, "wire_payload_bytes_total",
+                     direction="up") == tr["total_up"]
+    assert _wire_sum(reg, "wire_payload_bytes_total",
+                     direction="down") == tr["total_down"]
+    assert _wire_sum(reg, "wire_overhead_bytes_total",
+                     direction="up") == tr["overhead_up"]
+    assert _wire_sum(reg, "wire_overhead_bytes_total",
+                     direction="down") == tr["overhead_down"]
+    for k in (0, 1):
+        assert reg.value("wire_payload_bytes_total", direction="up",
+                         client=k) == tr["uplink_bytes"][k]
+        assert reg.value("wire_payload_bytes_total", direction="down",
+                         client=k) == tr["downlink_bytes"][k]
+    # and the federation-level counters reconcile with the ledger
+    assert reg.total("fed_uplink_bytes_total") == hist["uploaded_cum"]
+    assert reg.total("fed_downlink_bytes_total") == hist["downloaded_cum"]
 
 
-def test_async_fleet_duplicate_stale_upload_is_rejected(tmp_path):
+def test_async_fleet_duplicate_stale_upload_is_rejected(tmp_path, obs_on):
     """Torture (generation protocol): with gen_size=1 the first upload
     flushes generation 0, making the second client's upload stale; its
     replay — a duplicate upload for a stale generation — must be rejected
@@ -605,6 +669,25 @@ def test_async_fleet_duplicate_stale_upload_is_rejected(tmp_path):
     # duplicate bytes travelled, so both tallies include them — and agree
     assert hist["uploaded_cum"] == hist["traffic"]["total_up"]
     assert hist["downloaded_cum"] == hist["traffic"]["total_down"]
+    # the rejection is visible in the trace and mirrors gen_stats exactly
+    dup = obs_on.tracer().events("gen.duplicate")
+    assert [(e.gen, e.client) for e in dup] == [(0, 1)]
+    reg = obs_on.registry()
+    assert reg.total("gen_duplicates_total") == s["duplicates"] == 1
+    assert reg.value("gen_stale_total",
+                     outcome="merged") == s["stale_merged"] == 1
+    assert reg.value("gen_flushes_total", kind="full") == s["flushed"] == 2
+    # duplicate + stale payloads still crossed the wire: counters equal
+    # traffic() exactly, so rejected bytes cannot vanish from the books
+    tr = hist["traffic"]
+    assert _wire_sum(reg, "wire_payload_bytes_total",
+                     direction="up") == tr["total_up"]
+    assert _wire_sum(reg, "wire_payload_bytes_total",
+                     direction="down") == tr["total_down"]
+    assert _wire_sum(reg, "wire_overhead_bytes_total",
+                     direction="up") == tr["overhead_up"]
+    assert _wire_sum(reg, "wire_overhead_bytes_total",
+                     direction="down") == tr["overhead_down"]
 
 
 @pytest.mark.slow

@@ -30,9 +30,9 @@ import traceback
 from benchmarks import (async_stragglers, codec_accuracy, cohort_throughput,
                         comm_cost, fig3_rank_selection, fig6_alternating,
                         fig8_convergence, fig10_client_drift, obs_overhead,
-                        table1_main_grid, table2_model_scale, table4_dp,
-                        table7_pathologic, table8_resource_het,
-                        table9_criterion)
+                        server_throughput, table1_main_grid,
+                        table2_model_scale, table4_dp, table7_pathologic,
+                        table8_resource_het, table9_criterion)
 
 TABLES = {
     "table1": table1_main_grid.main,
@@ -50,6 +50,7 @@ TABLES = {
     "async": async_stragglers.main,
     "cohort": cohort_throughput.main,
     "obs": obs_overhead.main,
+    "server": server_throughput.main,
 }
 
 # benches the --check gate covers: name -> committed artifact filename
@@ -63,6 +64,7 @@ ARTIFACTS = {
     "cohort": "cohort_throughput",
     "async": "async_stragglers",
     "obs": "obs_overhead",
+    "server": "server_throughput",
 }
 ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
 REGRESSION_TOL = 0.01   # fail when measured bytes grow by more than 1%

@@ -1,0 +1,119 @@
+"""Server aggregation throughput: compiled stacked hot path vs the eager
+python reference (ISSUE 8).
+
+Times ``comm/server.aggregate_cohort`` end to end — wire decode plus fold —
+on one large cohort of encoded uploads, for each backend:
+
+``python``    per-payload ``codec.decode`` + the eager per-client pytree
+              fold (core/aggregate.py references).
+``compiled``  one batched decode onto a leading client axis
+              (``codec.decode_stacked``) + one jitted program per method
+              (core/aggregate.py ``*_stacked``).
+
+The two backends' outputs are asserted bit-identical (tolerance for
+flexlora's SVD) before any timing is recorded; each backend warms once
+(compile excluded) and the best of ``REPS`` alternating repetitions is
+kept.  ``payload_bytes`` (total encoded cohort size) is deterministic and
+gated by ``benchmarks/run.py --check`` against the committed artifact, so
+a codec regression can't hide inside a throughput win.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.comm import codec
+from repro.comm.server import ClientUpdate, aggregate_cohort
+from repro.configs.base import get_config
+from repro.core import lora, selection
+
+REPS = 3
+N_COHORT = 64
+RANK = 8
+
+
+def _cohort(seed=common.SEED):
+    """One N_COHORT-client cohort of full-mask fp32 uploads."""
+    cfg = get_config("roberta-sim")
+    adapters = lora.init_adapters(cfg, jax.random.PRNGKey(seed), RANK)
+    masks = selection.masks_like(adapters)
+    key = jax.random.PRNGKey(seed + 1)
+    updates = []
+    for k in range(N_COHORT):
+        delta = jax.tree.map(lambda x: x, adapters)
+        for path, ab in lora.iter_modules(delta):
+            k1, k2, key = jax.random.split(key, 3)
+            h = selection._get(delta, path)
+            h["a"] = 0.01 * jax.random.normal(k1, ab["a"].shape,
+                                              ab["a"].dtype)
+            h["b"] = 0.01 * jax.random.normal(k2, ab["b"].shape,
+                                              ab["b"].dtype)
+        payload = codec.encode(delta, masks, 2, codec="fp32")
+        updates.append(ClientUpdate(k, payload, weight=1.0 + (k % 5) * 0.25,
+                                    version=0, parity=2))
+    return adapters, updates
+
+
+def _agg(method, adapters, updates, impl, **kw):
+    new, _ = aggregate_cohort(method, adapters, updates, impl=impl, **kw)
+    jax.block_until_ready(jax.tree.leaves(new))
+    return new
+
+
+def _assert_parity(method, ref, new):
+    if method == "flexlora":
+        for x, y in zip(jax.tree.leaves(ref), jax.tree.leaves(new)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-5, rtol=1e-5)
+        return
+    for x, y in zip(jax.tree.leaves(ref), jax.tree.leaves(new)):
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+
+
+def main(quick=True):
+    methods = ["fl_lora", "hetlora"] if quick \
+        else ["fl_lora", "lora_a2", "hetlora", "flexlora"]
+    adapters, updates = _cohort()
+    payload_bytes = sum(len(u.payload) for u in updates)
+    ranks = [RANK if k % 2 else RANK // 2 for k in range(N_COHORT)]
+    kw_of = {"flexlora": {"r_G": RANK},
+             "hetlora": {"client_rank_list": ranks, "hetlora_gamma": 0.99}}
+    rows = []
+    for method in methods:
+        kw = kw_of.get(method, {})
+        outs, best = {}, {}
+        for impl in ("python", "compiled"):
+            outs[impl] = _agg(method, adapters, updates, impl, **kw)  # warm
+            best[impl] = float("inf")
+        _assert_parity(method, outs["python"], outs["compiled"])
+        for _ in range(REPS):                 # alternate to cancel drift
+            for impl in ("python", "compiled"):
+                t0 = time.perf_counter()
+                _agg(method, adapters, updates, impl, **kw)
+                best[impl] = min(best[impl], time.perf_counter() - t0)
+        row = {"method": method, "n_clients": N_COHORT, "rank": RANK,
+               "python_agg_s": round(best["python"], 4),
+               "compiled_agg_s": round(best["compiled"], 4),
+               "python_cohorts_per_s": round(1 / best["python"], 3),
+               "compiled_cohorts_per_s": round(1 / best["compiled"], 3),
+               "speedup": round(best["python"] / best["compiled"], 3),
+               "payload_bytes": payload_bytes}
+        rows.append(row)
+        print(f"server_throughput/{method},"
+              f"{best['compiled'] * 1e6:.0f},"
+              f"python={row['python_cohorts_per_s']:.2f}agg/s;"
+              f"compiled={row['compiled_cohorts_per_s']:.2f}agg/s;"
+              f"speedup={row['speedup']:.2f}x")
+    common.save("server_throughput", rows)
+    slow = [r for r in rows if r["speedup"] < 2.0]
+    if slow:
+        print(f"# WARNING: compiled under 2x on "
+              f"{[r['method'] for r in slow]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

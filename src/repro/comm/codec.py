@@ -237,9 +237,24 @@ def _parse_header(payload):
     return header, payload[8 + hlen:]
 
 
+# instrumentation hook: total payload-decode invocations (decode_stacked
+# counts one per stacked payload).  tests/test_server_hotpath.py snapshots
+# this around a GenServer generation lifecycle to assert each upload is
+# decoded at most once (flush and stale-merge share the per-generation
+# decoded cache).
+_decode_calls = 0
+
+
+def decode_call_count() -> int:
+    """Monotone count of per-payload decode operations (see above)."""
+    return _decode_calls
+
+
 def decode(payload):
     """Unpack wire bytes into a dense adapter-delta pytree (unselected rank
     slots are exactly zero).  Inverse of encode for lossless codecs."""
+    global _decode_calls
+    _decode_calls += 1
     header, body = _parse_header(payload)
     codec, halves = header["codec"], header["halves"]
     tree, off = {}, 0
@@ -264,6 +279,80 @@ def decode(payload):
             b[idx] = rows
         a = a.reshape(L, r, d_in).transpose(0, 2, 1).reshape(lead + (d_in, r))
         b = b.reshape(L, r, d_out).reshape(lead + (r, d_out))
+        node = tree
+        parts = e["p"].split(SEP)
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = {"a": a.astype(dt), "b": b.astype(dt)}
+    return tree
+
+
+def _module_sig(header):
+    """Structural signature of a payload: travelling halves + per-module
+    static geometry (masks/nsel excluded — those vary per client)."""
+    return (header["halves"],
+            tuple((e["p"], tuple(e["lead"]), e["din"], e["r"], e["dout"],
+                   e["dt"]) for e in header["modules"]))
+
+
+def decode_stacked(payloads):
+    """Decode one cohort's payloads into a single pytree with a leading
+    (K,) client axis — the input shape of the compiled stacked aggregators
+    (core/aggregate.py ``*_stacked``).
+
+    Row k is bit-identical to ``decode(payloads[k])``: every payload's
+    slot rows land in one preallocated (K, n_slots, dim) buffer per module
+    half, and the rank-major → column-major transpose that ``decode``
+    applies per client runs ONCE over the whole batch (the per-row
+    reshape/transpose commutes with stacking).  Requires all payloads to
+    share module structure and travelling halves — true within a cohort,
+    where every client runs the same adapter architecture and the round's
+    parity; payloads that disagree fall back to per-payload decode +
+    stack.  Either path counts K decodes on the instrumentation hook."""
+    if not payloads:
+        raise ValueError("decode_stacked needs at least one payload")
+    parsed = [_parse_header(p) for p in payloads]
+    sig = _module_sig(parsed[0][0])
+    if any(_module_sig(h) != sig for h, _ in parsed[1:]):
+        trees = [decode(p) for p in payloads]   # hook counted inside
+        import jax
+        return jax.tree.map(lambda *xs: np.stack(xs), *trees)
+    global _decode_calls
+    _decode_calls += len(payloads)
+    K = len(payloads)
+    halves = parsed[0][0]["halves"]
+    mods0 = parsed[0][0]["modules"]
+    bufs = []
+    for e in mods0:
+        lead = tuple(e["lead"])
+        L = int(np.prod(lead, dtype=np.int64)) if lead else 1
+        n_slots = L * e["r"]
+        bufs.append((np.zeros((K, n_slots, e["din"]), np.float32),
+                     np.zeros((K, n_slots, e["dout"]), np.float32)))
+    for k, (header, body) in enumerate(parsed):
+        codec, off = header["codec"], 0
+        for e, (abuf, bbuf) in zip(header["modules"], bufs):
+            n_slots, nsel = abuf.shape[1], e["nsel"]
+            if e["dense"]:
+                idx = np.arange(n_slots)
+            else:
+                idx = np.frombuffer(body, np.uint32, nsel, off)
+                off += nsel * INDEX_BYTES
+            if "a" in halves:
+                rows, off = _decode_rows(body, off, nsel, e["din"], codec)
+                abuf[k, idx] = rows
+            if "b" in halves:
+                rows, off = _decode_rows(body, off, nsel, e["dout"], codec)
+                bbuf[k, idx] = rows
+    tree = {}
+    for e, (abuf, bbuf) in zip(mods0, bufs):
+        lead = tuple(e["lead"])
+        L = int(np.prod(lead, dtype=np.int64)) if lead else 1
+        d_in, r, d_out = e["din"], e["r"], e["dout"]
+        dt = np.dtype(e["dt"]) if e["dt"] != "bfloat16" else BF16
+        a = abuf.reshape(K, L, r, d_in).transpose(0, 1, 3, 2) \
+                .reshape((K,) + lead + (d_in, r))
+        b = bbuf.reshape((K,) + lead + (r, d_out))
         node = tree
         parts = e["p"].split(SEP)
         for p in parts[:-1]:

@@ -34,12 +34,22 @@ Broadcaster — the server→client downlink under ``FedConfig.downlink_codec``
 All servers decode payloads through comm/codec.py; none ever sees a
 client's in-memory pytree directly.  Symmetrically, clients only ever see
 the Broadcaster's *decoded* payload, never the server's pytree.
+
+Aggregation backends (``aggregate_cohort(impl=...)``, selected by
+``FedConfig.server_impl``): ``compiled`` — the default hot path — decodes
+the whole cohort onto a leading (K,) client axis (codec.decode_stacked)
+and runs each method as one jitted program (core/aggregate.py
+``*_stacked``); ``python`` keeps the eager per-client reference it is
+parity-gated against.  GenServer additionally offers an opt-in streaming
+mode (``FedConfig.gen_streaming``) that folds partial sums as uploads
+arrive.  See docs/ARCHITECTURE.md for the full layer map.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Set
 
+import jax
 import numpy as np
 
 from repro import obs
@@ -149,20 +159,74 @@ class Broadcaster:
         return payload, codec.apply_update(prev, payload)
 
 
+SERVER_IMPLS = ("compiled", "python")
+
+
 def aggregate_cohort(method: str, adapters, updates: List[ClientUpdate], *,
                      r_G: Optional[int] = None,
                      client_rank_list: Optional[Sequence[int]] = None,
-                     hetlora_gamma: float = 0.99):
+                     hetlora_gamma: float = 0.99, impl: str = "python",
+                     decoded: Optional[list] = None):
     """Decode one cohort's uploads and fold them into ``adapters`` with the
     method's full aggregator.  Weights renormalize over the given updates
     (dropped uploads never get here).  The single cohort-aggregation code
     path shared by SyncServer (one call per round) and GenServer (one call
     per generation flush / stale merge) — which is what makes the async
     generation path bit-identical to sync in the degenerate configuration.
-    Returns (new adapters, decoded deltas)."""
-    deltas = [codec.decode(u.payload) for u in updates]
-    wsum = sum(u.weight for u in updates)
-    w = [u.weight / wsum for u in updates]
+
+    impl selects the backend (``FedConfig.server_impl``):
+
+    ``python``    the eager per-client reference (core/aggregate.py
+                  ``fedavg``/``lora_a2``/``flexlora``/``hetlora``) — one
+                  pytree op per client, the spec the compiled path is
+                  gated against.
+    ``compiled``  the stacked hot path: one batched decode onto a leading
+                  (K,) client axis (codec.decode_stacked) and one jitted
+                  program per method (core/aggregate.py ``*_stacked``) —
+                  bit-exact vs ``python`` for fedavg/lora_a2/hetlora,
+                  tolerance-gated for flexlora's batched SVD
+                  (tests/test_server_hotpath.py; timed by
+                  benchmarks/server_throughput.py).
+
+    decoded (optional) short-circuits payload decoding with already-decoded
+    delta trees aligned with ``updates`` — GenServer passes its
+    per-generation decode cache here so each payload is decoded at most
+    once per generation lifecycle.
+
+    Returns (new adapters, decoded per-client deltas)."""
+    if impl not in SERVER_IMPLS:
+        raise ValueError(f"unknown server impl {impl!r}; "
+                         f"want one of {SERVER_IMPLS}")
+    # Pin the weight dtype here, at the shared entry point: python floats
+    # keep the eager numpy folds in float32 (NEP 50), whereas np.float64
+    # weights would silently promote them to float64 and make the
+    # reference's precision depend on what scalar type the caller used.
+    wsum = float(sum(u.weight for u in updates))
+    w = [float(u.weight) / wsum for u in updates]
+    if impl == "compiled":
+        if decoded is not None:
+            stacked = jax.tree.map(
+                lambda *xs: np.stack([np.asarray(x) for x in xs]), *decoded)
+        else:
+            stacked = codec.decode_stacked([u.payload for u in updates])
+        if method == "fl_lora":
+            new = aggregate.fedavg_stacked(adapters, stacked, w)
+        elif method in ("ffa_lora", "lora_a2"):
+            new = aggregate.lora_a2_stacked(adapters, stacked, w)
+        elif method == "flexlora":
+            new = aggregate.flexlora_stacked(adapters, stacked, w, r_G)
+        elif method == "hetlora":
+            ranks = [client_rank_list[u.client_id] for u in updates]
+            new = aggregate.hetlora_stacked(adapters, stacked, w, ranks,
+                                            hetlora_gamma)
+        else:
+            raise ValueError(method)
+        if decoded is None:
+            decoded = [jax.tree.map(lambda x, _k=k: x[_k], stacked)
+                       for k in range(len(updates))]
+        return new, decoded
+    deltas = decoded if decoded is not None \
+        else [codec.decode(u.payload) for u in updates]
     if method == "fl_lora":
         new = aggregate.fedavg(adapters, deltas, w)
     elif method in ("ffa_lora", "lora_a2"):
@@ -179,16 +243,24 @@ def aggregate_cohort(method: str, adapters, updates: List[ClientUpdate], *,
 
 
 class SyncServer:
-    """Round-synchronous aggregation endpoint for every paper method."""
+    """Round-synchronous aggregation endpoint for every paper method.
+
+    ``impl`` selects the ``aggregate_cohort`` backend — ``compiled``
+    (stacked decode + one jitted program per round, the default hot path)
+    or ``python`` (the eager per-client reference)."""
 
     def __init__(self, method: str, adapters, *, r_G: Optional[int] = None,
                  client_rank_list: Optional[Sequence[int]] = None,
-                 hetlora_gamma: float = 0.99):
+                 hetlora_gamma: float = 0.99, impl: str = "compiled"):
+        if impl not in SERVER_IMPLS:
+            raise ValueError(f"unknown server impl {impl!r}; "
+                             f"want one of {SERVER_IMPLS}")
         self.method = method
         self.adapters = adapters
         self.r_G = r_G
         self.client_rank_list = client_rank_list
         self.hetlora_gamma = hetlora_gamma
+        self.impl = impl
         self.version = 0
 
     def aggregate_round(self, updates: List[ClientUpdate]):
@@ -200,7 +272,7 @@ class SyncServer:
         self.adapters, deltas = aggregate_cohort(
             self.method, self.adapters, updates, r_G=self.r_G,
             client_rank_list=self.client_rank_list,
-            hetlora_gamma=self.hetlora_gamma)
+            hetlora_gamma=self.hetlora_gamma, impl=self.impl)
         return deltas
 
 
@@ -213,6 +285,18 @@ class _Generation:
     drops: int = 0                 # launches that ended in a dropped upload
     buffer: Dict[int, ClientUpdate] = dataclasses.field(default_factory=dict)
     members: Set[int] = dataclasses.field(default_factory=set)
+    # decode-once cache: client -> decoded delta pytree, filled on arrival
+    # for every buffered upload (flush and stale merge both consume it, so
+    # a payload is decoded at most once per generation lifecycle —
+    # codec.decode_call_count() is the test hook)
+    decoded: Dict[int, object] = dataclasses.field(default_factory=dict)
+    # streaming mode only: the running partial sum (core/aggregate.py
+    # stream_accumulate) + the raw weights/ranks folded into it so far.
+    # Reset after each consumption (flush resets it for the stale phase).
+    accum: object = None
+    accum_wsum: float = 0.0
+    accum_weights: list = dataclasses.field(default_factory=list)
+    accum_ranks: list = dataclasses.field(default_factory=list)
 
 
 class GenServer:
@@ -250,13 +334,29 @@ class GenServer:
     One upload per client per generation: duplicates — including a
     duplicate upload for a stale generation — are rejected without touching
     the accounting, so a misbehaving peer cannot corrupt the buffer.
+
+    Every buffered upload is decoded exactly once, on arrival, into the
+    generation's decode cache (``_Generation.decoded``); the flush and the
+    stale merge both consume the cache.  ``impl`` selects the
+    ``aggregate_cohort`` backend exactly as on SyncServer.
+
+    ``streaming=True`` (``FedConfig.gen_streaming``) additionally folds
+    each decoded upload into a running partial sum as it arrives
+    (core/aggregate.stream_accumulate) instead of materializing the whole
+    cohort at flush; the flush then just renormalizes and applies the
+    method's closure (stream_finalize), and the stale-merge path reuses
+    the same accumulator for the post-flush stragglers.  Streaming sums in
+    arrival order — not the reference's client-id-sorted order — so it is
+    equivalence-gated at fp32 tolerance, opt-in, and OFF by default (the
+    default path keeps the bit-for-bit sync-degenerate guarantee).
     """
 
     def __init__(self, method: str, adapters, *, gen_size: int,
                  staleness_alpha: float = 0.5, server_lr: float = 1.0,
                  stale_policy: str = "merge", r_G: Optional[int] = None,
                  client_rank_list: Optional[Sequence[int]] = None,
-                 hetlora_gamma: float = 0.99):
+                 hetlora_gamma: float = 0.99, impl: str = "compiled",
+                 streaming: bool = False):
         if method not in ASYNC_METHODS:
             raise ValueError(f"unknown async method {method!r}; the "
                              f"generation protocol supports {ASYNC_METHODS}")
@@ -265,6 +365,9 @@ class GenServer:
         if stale_policy not in GEN_POLICIES:
             raise ValueError(f"unknown stale policy {stale_policy!r}; want "
                              f"one of {GEN_POLICIES}")
+        if impl not in SERVER_IMPLS:
+            raise ValueError(f"unknown server impl {impl!r}; "
+                             f"want one of {SERVER_IMPLS}")
         self.method = method
         self.adapters = adapters
         self.gen_size = gen_size
@@ -274,6 +377,8 @@ class GenServer:
         self.r_G = r_G
         self.client_rank_list = client_rank_list
         self.hetlora_gamma = hetlora_gamma
+        self.impl = impl
+        self.streaming = streaming
         self.version = 0
         self.staleness_log: List[int] = []
         self._gens: Dict[int, _Generation] = {}
@@ -320,6 +425,22 @@ class GenServer:
 
     # -- arrival side -------------------------------------------------------
 
+    def _buffer_upload(self, g: _Generation, update: ClientUpdate) -> None:
+        """Buffer one accepted upload: decode it ONCE into the generation's
+        cache and, in streaming mode, fold it into the running partial sum
+        immediately (the flush then only renormalizes + finalizes)."""
+        g.buffer[update.client_id] = update
+        delta = codec.decode(update.payload)
+        g.decoded[update.client_id] = delta
+        if self.streaming:
+            g.accum = aggregate.stream_accumulate(
+                self.method, g.origin, g.accum, delta, float(update.weight))
+            g.accum_wsum += float(update.weight)
+            g.accum_weights.append(float(update.weight))
+            g.accum_ranks.append(
+                self.client_rank_list[update.client_id]
+                if self.client_rank_list is not None else None)
+
     def receive(self, update: ClientUpdate) -> bool:
         """Buffer one arrived upload for its generation; True when it
         completed the open generation (version bump)."""
@@ -337,7 +458,7 @@ class GenServer:
         obs.observe("gen_staleness", self.version - gid)
         if gid == self.version:
             g.members.add(update.client_id)
-            g.buffer[update.client_id] = update
+            self._buffer_upload(g, update)
             obs.event("gen.fill", gen=gid, client=update.client_id,
                       buffered=len(g.buffer), target=self.gen_size)
             if len(g.buffer) >= self.gen_size:
@@ -349,7 +470,7 @@ class GenServer:
         # detectable duplicate even when the policy discarded the original
         g.members.add(update.client_id)
         if self.stale_policy == "merge":
-            g.buffer[update.client_id] = update
+            self._buffer_upload(g, update)
             obs.event("gen.stale_buffered", gen=gid, client=update.client_id,
                       staleness=self.version - gid)
         else:
@@ -377,17 +498,39 @@ class GenServer:
 
     # -- generation turnover ------------------------------------------------
 
-    def _apply_cohort(self, origin, updates: List[ClientUpdate]):
-        updates = sorted(updates, key=lambda u: u.client_id)
-        new, _ = aggregate_cohort(self.method, origin, updates,
+    def _apply_cohort(self, g: _Generation):
+        """The generation's new global state from its buffered uploads:
+        the streaming accumulator when enabled (renormalize + finalize,
+        arrival order), else one ``aggregate_cohort`` call over the
+        decode cache — client-id-sorted, so the float-sum order matches
+        the sync server's launch order."""
+        if self.streaming and g.accum is not None:
+            return aggregate.stream_finalize(
+                self.method, g.origin, g.accum, g.accum_wsum,
+                r_G=self.r_G, weights=g.accum_weights,
+                client_ranks=g.accum_ranks, gamma=self.hetlora_gamma)
+        updates = sorted(g.buffer.values(), key=lambda u: u.client_id)
+        decoded = [g.decoded[u.client_id] for u in updates]
+        new, _ = aggregate_cohort(self.method, g.origin, updates,
                                   r_G=self.r_G,
                                   client_rank_list=self.client_rank_list,
-                                  hetlora_gamma=self.hetlora_gamma)
+                                  hetlora_gamma=self.hetlora_gamma,
+                                  impl=self.impl, decoded=decoded)
         return new
+
+    def _reset_buffer(self, g: _Generation) -> None:
+        """Clear a consumed buffer (post-flush): the decode cache and the
+        streaming accumulator start fresh for the stale-straggler phase."""
+        g.buffer = {}
+        g.decoded = {}
+        g.accum = None
+        g.accum_wsum = 0.0
+        g.accum_weights = []
+        g.accum_ranks = []
 
     def _flush_current(self, partial: bool) -> None:
         g = self._gens[self.version]
-        new = self._apply_cohort(g.origin, list(g.buffer.values()))
+        new = self._apply_cohort(g)
         if self.adapters is g.origin:
             # no stale merge moved the global since this generation opened:
             # the aggregation applies exactly (the sync-equivalent path)
@@ -403,7 +546,7 @@ class GenServer:
                   outstanding=g.outstanding)
         obs.count("gen_flushes_total",
                   kind="partial" if partial else "full")
-        g.buffer = {}
+        self._reset_buffer(g)
         if g.outstanding <= 0:
             del self._gens[gid]
         # else: keep tracking the generation — its in-flight stragglers
@@ -415,7 +558,7 @@ class GenServer:
             return
         tau = self.version - gid
         beta = self.server_lr * (1.0 + tau) ** (-self.staleness_alpha)
-        new = self._apply_cohort(g.origin, list(g.buffer.values()))
+        new = self._apply_cohort(g)
         self.adapters = tree_add(self.adapters,
                                  tree_scale(tree_sub(new, g.origin), beta))
         self.stats["stale_merged"] += 1
@@ -445,7 +588,7 @@ class GenServer:
         obs.event("gen.flush", gen=gid, kind="partial_dropped",
                   n=len(g.buffer), outstanding=g.outstanding)
         obs.count("gen_flushes_total", kind="partial")
-        g.buffer = {}
+        self._reset_buffer(g)
         self.version += 1
         if g.outstanding <= 0:
             del self._gens[gid]

@@ -4,8 +4,34 @@ All aggregators take per-client adapter *deltas* (client_final - global) and
 FedAvg weights w_k, and return the new global adapters.  The discordance
 problem (Eq. 2) is about what happens here: averaging 'a' and 'b' separately
 (FL+LoRA) does not average the products.
+
+Two implementations per method live in this module:
+
+* the eager **Python reference** (``fedavg`` / ``lora_a2`` / ``flexlora`` /
+  ``hetlora``) — one pytree op per client, the written spec every other
+  path is gated against;
+* the **compiled stacked** twins (``fedavg_stacked`` / ``lora_a2_stacked``
+  / ``flexlora_stacked`` / ``hetlora_stacked``) — the server hot path
+  (comm/server.py ``aggregate_cohort(impl='compiled')``): the whole cohort
+  arrives as one pytree with a leading (K,) client axis
+  (comm/codec.decode_stacked) and each aggregator runs as ONE jitted
+  program — the weighted fold is a scan of separately-rounded products
+  (kernels/ops.cohort_fold; Mosaic kernel on TPU), flexlora's per-module
+  SVD batches through ``jnp.linalg.svd`` over the module's leading dims,
+  and hetlora's sparsity decay is applied vectorized over rank slots.
+  fedavg/lora_a2/hetlora are *bit-exact* against the reference;
+  flexlora is bit-exact on this container and tolerance-gated in general
+  (batched LAPACK SVD may pick different-sign singular bases on other
+  BLAS builds).  tests/test_server_hotpath.py holds the gate.
+
+``stream_accumulate``/``stream_finalize`` back GenServer's streaming mode:
+partial sums fold in arrival order as uploads land, so they are
+equivalence-gated at fp32 tolerance, not bit-exact (summation order
+differs from the client-id-sorted reference).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -13,29 +39,52 @@ import numpy as np
 
 from repro.core.lora import iter_modules
 from repro.core.selection import _get
+from repro.kernels import ops as kops
 from repro.utils import tree_add, tree_weighted_sum
 
 
 def fedavg(global_adapters, deltas, weights):
-    """FL + LoRA: per-matrix weighted average (suffers discordance)."""
+    """FL + LoRA (paper §2, Eq. 2): per-matrix weighted average.
+
+    Closed form, per module and half h ∈ {a, b}:
+
+        h_new = h_global + Σ_k w_k · Δh_k
+
+    Averaging the halves separately does not average the products
+    (Σ w_k a_k b_k ≠ (Σ w_k a_k)(Σ w_k b_k)) — the discordance the paper's
+    Eq. 2 quantifies; this aggregator is the baseline that suffers it."""
     avg = tree_weighted_sum(deltas, list(weights))
     return tree_add(global_adapters, avg)
 
 
 def lora_a2(global_adapters, masked_deltas, weights):
-    """LoRA-A² (and FFA-LoRA when masks are full and parity fixed at 1):
-    weighted sum of masked active-half deltas.  Exact because the frozen
-    half is identical across clients (Eq. 3)."""
+    """LoRA-A² (paper §3.2, Eq. 3) and FFA-LoRA (Sun et al., 2024):
+    weighted sum of the *active-half* deltas.
+
+        h_new = h_global + Σ_k w_k · Δh_k    (active half only)
+
+    Exact — no discordance — because the frozen half is identical across
+    clients, so Σ w_k a b_k = a Σ w_k b_k.  ``masked_deltas`` carry zeros
+    outside each client's selected rank slots (core/selection.py), so a
+    rank slot's aggregate only moves by the clients that selected it; the
+    frozen half's delta is zero by construction.  FFA-LoRA is the fixed
+    case: parity pinned to 'b', masks full."""
     return tree_add(global_adapters, tree_weighted_sum(masked_deltas, list(weights)))
 
 
 def flexlora(global_adapters, client_adapters, weights, rank, lora_alpha_scale=1.0):
-    """FlexLoRA (Bai et al., 2024): aggregate the full products
-    ΔW = Σ w_k a_k b_k, then SVD back to rank-r factors.
+    """FlexLoRA (Bai et al., 2024; paper §2 baseline): aggregate the full
+    products, then SVD-truncate back to rank-r factors.  Per module:
 
-    Matches the paper's observed failure mode: SVD of a (d_in, d_out) matrix
-    per module per round — expensive and occasionally ill-conditioned (the
-    paper could not report RoBERTa-large numbers for this reason)."""
+        ΔW  = Σ_k w_k · a_k b_k                (d_in, d_out), fp32
+        U S Vᵀ = SVD(ΔW)
+        a_new = U[:, :r] √S[:r],   b_new = √S[:r] Vᵀ[:r, :]
+
+    so a_new b_new is the best rank-r approximation of the exact weighted
+    product average.  Matches the paper's observed failure mode: one SVD
+    of a (d_in, d_out) matrix per module per round — expensive and
+    occasionally ill-conditioned (the paper could not report RoBERTa-large
+    numbers for this reason)."""
     new = jax.tree.map(lambda x: x, global_adapters)
     for path, _ in iter_modules(global_adapters):
         prods = []
@@ -58,15 +107,19 @@ def flexlora(global_adapters, client_adapters, weights, rank, lora_alpha_scale=1
 
 
 def hetlora(global_adapters, deltas, weights, client_ranks, gamma=0.99):
-    """HetLoRA (Cho et al., 2023): clients train truncated-rank adapters;
-    zero-padding aligns them for aggregation (deltas outside a client's rank
-    are zero by construction here).  Sparsity decay (self-pruning): each
-    round, rank slot j shrinks by gamma in proportion to the aggregation
-    weight of the clients whose truncation rank excludes it,
+    """HetLoRA (Cho et al., 2023; paper §2 baseline): clients train
+    truncated-rank adapters; zero-padding aligns them for aggregation
+    (deltas outside a client's rank are zero by construction here).
 
-        decay_j = gamma ** sum_k w_k * 1[r_k <= j]
+    Closed form: the FedAvg fold of the zero-padded deltas, followed by
+    per-rank-slot sparsity decay (self-pruning) with exponent equal to the
+    aggregation weight of the clients whose truncation rank excludes the
+    slot:
 
-    so slots beyond every client's rank decay by the full gamma, slots every
+        h_new[.., j] = (h_global + Σ_k w_k Δh_k)[.., j] · γ^e_j
+        e_j = Σ_k w_k · 1[r_k <= j]
+
+    so slots beyond every client's rank decay by the full γ, slots every
     client trains don't decay at all, and a heterogeneous cohort gradually
     prunes the tail its small-rank members never update.  (The previous
     ``arange(r) < max(client_ranks)`` gate was a no-op whenever the global
@@ -90,3 +143,207 @@ def hetlora(global_adapters, deltas, weights, client_ranks, gamma=0.99):
 def fedavg_params(global_params, deltas, weights):
     """Full fine-tuning FedAvg (the 'FL (w/o LoRA)' row)."""
     return tree_add(global_params, tree_weighted_sum(deltas, list(weights)))
+
+
+# ---------------------------------------------------------------------------
+# compiled stacked aggregation — the server hot path
+# (comm/server.aggregate_cohort impl='compiled')
+# ---------------------------------------------------------------------------
+#
+# Bit-exactness vs the eager reference is deliberate, not incidental.  The
+# references dispatch each mul and add as its own XLA program, so every
+# intermediate rounds to float32; inside one jitted program XLA:CPU
+# contracts ``acc + d * w`` into an FMA (one rounding instead of two),
+# which silently forks the trajectory.  The stacked fold therefore
+# multiplies the whole cohort by its weights FIRST (one elementwise op —
+# rounds exactly like the eager per-client multiplies) and folds with a
+# scan of PURE adds, which have no multiply to contract with.  Weights are
+# pre-cast to float32 host-side, matching how jnp promotes a python-float
+# scalar against a float32 array.
+
+
+def _w32(weights):
+    """Weights as a float32 device array — bitwise the scalars the eager
+    reference promotes its python floats to."""
+    return jnp.asarray(np.asarray(list(weights), np.float32))
+
+
+@jax.jit
+def _fold_jit(global_tree, stacked, w):
+    return jax.tree.map(lambda g, d: kops.cohort_fold(g, d, w),
+                        global_tree, stacked)
+
+
+def fedavg_stacked(global_adapters, stacked_deltas, weights):
+    """Compiled twin of ``fedavg``: ``stacked_deltas`` is one pytree with a
+    leading (K,) client axis; the fold runs as one jitted program.
+    Bit-exact vs the reference on CPU (see module docstring)."""
+    return _fold_jit(global_adapters, stacked_deltas, _w32(weights))
+
+
+def lora_a2_stacked(global_adapters, stacked_masked_deltas, weights):
+    """Compiled twin of ``lora_a2``: identical fold — the rank-slot masking
+    already happened client-side (unselected slots decode to exact zeros),
+    so per-slot rank-index handling is free under stacking."""
+    return _fold_jit(global_adapters, stacked_masked_deltas, _w32(weights))
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _flexlora_jit(g, stacked, w, rank):
+    out = jax.tree.map(lambda x: x, g)
+    for path, ab in iter_modules(g):
+        dx = _get(stacked, path)
+        # client finals, reconstructed under the leading axis: the
+        # broadcast add rounds elementwise exactly like the per-client
+        # tree_add the reference applies before calling flexlora
+        fa = (ab["a"] + dx["a"]).astype(jnp.float32)   # (K, ..., d_in, r)
+        fb = (ab["b"] + dx["b"]).astype(jnp.float32)   # (K, ..., r, d_out)
+        prods = jnp.einsum("k...ir,k...ro->k...io", fa, fb)
+        pw = prods * w.reshape((-1,) + (1,) * (prods.ndim - 1))
+        agg, _ = jax.lax.scan(lambda acc, p: (acc + p, None),
+                              jnp.zeros_like(pw[0]), pw)
+        u, s, vt = jnp.linalg.svd(agg, full_matrices=False)
+        sq = jnp.sqrt(s[..., :rank])
+        a_new = u[..., :, :rank] * sq[..., None, :]
+        b_new = vt[..., :rank, :] * sq[..., :, None]
+        holder = _get(out, path)
+        holder["a"] = a_new.astype(holder["a"].dtype)
+        holder["b"] = b_new.astype(holder["b"].dtype)
+    return out
+
+
+def flexlora_stacked(global_adapters, stacked_deltas, weights, rank,
+                     lora_alpha_scale=1.0):
+    """Compiled twin of ``flexlora``: client products and the per-module
+    SVD batch over the stacked cohort in one jitted program (the SVD runs
+    batched over the modules' leading period axis AND needs no per-client
+    loop — products fold first).  Takes *deltas* (it reconstructs finals
+    as ``global + delta`` under the client axis), where the reference
+    takes finals; ``aggregate_cohort`` owns that difference."""
+    return _flexlora_jit(global_adapters, stacked_deltas, _w32(weights),
+                         int(rank))
+
+
+def _hetlora_decays(global_adapters, weights, client_ranks, gamma):
+    """Per-module decay vectors γ^e (float64 host arithmetic, identical to
+    the reference), in ``iter_modules`` order."""
+    w = np.asarray(list(weights), np.float64)
+    w = w / w.sum()
+    ranks = np.asarray(list(client_ranks), np.int64)[:, None]
+    decays = []
+    for path, ab in iter_modules(global_adapters):
+        r = ab["a"].shape[-1]
+        untrained_w = (w[:, None] * (ranks <= np.arange(r)[None, :])).sum(0)
+        decays.append(jnp.asarray(
+            gamma ** untrained_w, np.asarray(ab["a"]).dtype))
+    return tuple(decays)
+
+
+@jax.jit
+def _hetlora_jit(g, stacked, w, decays):
+    new = jax.tree.map(lambda gx, dx: kops.cohort_fold(gx, dx, w),
+                       g, stacked)
+    out = jax.tree.map(lambda x: x, new)
+    for (path, ab), decay in zip(iter_modules(new), decays):
+        holder = _get(out, path)
+        holder["a"] = ab["a"] * decay
+        holder["b"] = ab["b"] * decay[..., :, None]
+    return out
+
+
+def hetlora_stacked(global_adapters, stacked_deltas, weights, client_ranks,
+                    gamma=0.99):
+    """Compiled twin of ``hetlora``: one jitted fold + vectorized sparsity
+    decay.  The decay exponents are computed host-side in float64 exactly
+    as the reference does (γ^e only then rounds to the adapter dtype), so
+    the compiled program applies bit-identical decay factors."""
+    decays = _hetlora_decays(global_adapters, weights, client_ranks, gamma)
+    return _hetlora_jit(global_adapters, stacked_deltas, _w32(weights),
+                        decays)
+
+
+# ---------------------------------------------------------------------------
+# streaming accumulation — GenServer's per-arrival partial sums
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _accum_add(acc, x, w):
+    """acc + w·x, one jitted step per arriving upload."""
+    return jax.tree.map(lambda a, d: a + d * w, acc, x)
+
+
+@jax.jit
+def _accum_scale_into(origin, acc, inv_wsum):
+    """origin + acc/wsum — the delta-method streaming finalizer."""
+    return jax.tree.map(lambda g, a: g + a * inv_wsum, origin, acc)
+
+
+@jax.jit
+def _product_tree(origin, delta):
+    """Flexlora streaming unit: this client's full product (origin+Δ)
+    per module, fp32, keyed by the module path tuple."""
+    out = {}
+    for path, ab in iter_modules(origin):
+        d = _get(delta, path)
+        out[path] = jnp.einsum(
+            "...ir,...ro->...io",
+            (ab["a"] + d["a"]).astype(jnp.float32),
+            (ab["b"] + d["b"]).astype(jnp.float32))
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _svd_truncate(origin, agg_products, inv_wsum, rank):
+    out = jax.tree.map(lambda x: x, origin)
+    for path, _ in iter_modules(origin):
+        agg = agg_products[path] * inv_wsum
+        u, s, vt = jnp.linalg.svd(agg, full_matrices=False)
+        sq = jnp.sqrt(s[..., :rank])
+        holder = _get(out, path)
+        holder["a"] = (u[..., :, :rank] * sq[..., None, :]) \
+            .astype(holder["a"].dtype)
+        holder["b"] = (vt[..., :rank, :] * sq[..., :, None]) \
+            .astype(holder["b"].dtype)
+    return out
+
+
+def stream_accumulate(method, origin, acc, delta, weight):
+    """Fold one arriving upload into a generation's running partial sum.
+
+    acc is ``None`` for the first arrival.  Delta methods (and hetlora)
+    accumulate raw-weighted deltas; flexlora accumulates raw-weighted full
+    products a_k b_k (SVD happens once, at finalize).  Returns the new
+    accumulator pytree."""
+    w = np.float32(weight)
+    x = _product_tree(origin, delta) if method == "flexlora" else delta
+    if acc is None:
+        return jax.tree.map(lambda d: d * w, x)
+    return _accum_add(acc, x, w)
+
+
+def stream_finalize(method, origin, acc, wsum, *, r_G=None, weights=None,
+                    client_ranks=None, gamma=0.99):
+    """Close a streaming accumulator into the generation's new global
+    state: renormalize by the accumulated raw-weight sum and apply the
+    method's closure (fold into origin; SVD truncation; sparsity decay).
+    Arrival-order summation differs from the client-id-sorted reference,
+    so this path is tolerance-gated (tests/test_server_hotpath.py)."""
+    inv = np.float32(1.0 / wsum)
+    if method == "flexlora":
+        return _svd_truncate(origin, acc, inv, int(r_G))
+    new = _accum_scale_into(origin, acc, inv)
+    if method == "hetlora":
+        decays = _hetlora_decays(origin, weights, client_ranks, gamma)
+        return _hetlora_jit_decay(new, decays)
+    return new
+
+
+@jax.jit
+def _hetlora_jit_decay(new, decays):
+    out = jax.tree.map(lambda x: x, new)
+    for (path, ab), decay in zip(iter_modules(new), decays):
+        holder = _get(out, path)
+        holder["a"] = ab["a"] * decay
+        holder["b"] = ab["b"] * decay[..., :, None]
+    return out

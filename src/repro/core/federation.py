@@ -105,6 +105,14 @@ class FedConfig:
     codec: str = "fp32"           # uplink element codec: fp32 | bf16 | int8
     downlink_codec: str = "fp32"  # server→client: fp32 | bf16 | delta
     server_mode: str = "sync"     # 'sync' | 'async' (generation-versioned)
+    server_impl: str = "compiled"  # cohort aggregation backend —
+    # 'compiled' (stacked decode + one jitted program per cohort, bit-exact
+    # vs the reference for fedavg/lora_a2/hetlora) | 'python' (eager
+    # per-client reference, comm/server.aggregate_cohort)
+    gen_streaming: bool = False   # async: fold partial sums as uploads
+    # arrive instead of materializing the cohort at flush (arrival-order
+    # summation — tolerance-gated, so opt-in; the default keeps the
+    # bit-for-bit sync-degenerate guarantee)
     buffer_size: Optional[int] = None  # async: generation fill target
     staleness_alpha: float = 0.5  # async: staleness discount exponent
     server_lr: float = 1.0        # async: step size on stale-merge corrections
@@ -442,7 +450,8 @@ def _run_sync(ctx: _Ctx, adapters, history, test_ds, evaluate):
     fed = ctx.fed
     server = SyncServer(fed.method, adapters, r_G=adapter_rank(fed),
                         client_rank_list=ctx.client_rank_list,
-                        hetlora_gamma=fed.hetlora_gamma)
+                        hetlora_gamma=fed.hetlora_gamma,
+                        impl=fed.server_impl)
     bcaster = Broadcaster(fed.downlink_codec)
     clock = net.RoundClock()
 
@@ -529,7 +538,8 @@ def make_gen_server(fed: FedConfig, adapters, client_rank_list,
                      stale_policy=fed.gen_stale_policy,
                      r_G=adapter_rank(fed),
                      client_rank_list=client_rank_list,
-                     hetlora_gamma=fed.hetlora_gamma)
+                     hetlora_gamma=fed.hetlora_gamma,
+                     impl=fed.server_impl, streaming=fed.gen_streaming)
 
 
 def _run_async(ctx: _Ctx, adapters, history, test_ds, evaluate):

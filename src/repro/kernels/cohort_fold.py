@@ -1,0 +1,68 @@
+"""Cohort-fold Pallas TPU kernel: the server aggregation hot loop
+
+    out = g + sum_k w[k] * x[k]
+
+over a stacked cohort x (K, N) with base g (1, N) and weights w (1, K),
+accumulating sequentially in client order k = 0..K-1 (the same fold order
+as the eager ``tree_weighted_sum`` reference in repro/utils.py).
+
+Grid: (N/bn, K) — the client axis is innermost, so each output block stays
+resident in VMEM while the K partial products accumulate into it; the base
+tree is added on the last client step.  One pass over the stacked cohort,
+no (K, N) temporary.
+
+This is the TPU fast path only: on CPU hosts the public wrapper
+(kernels/ops.cohort_fold) lowers to a lax.scan of separately-rounded
+products instead, which is *bit-exact* against the eager reference (the
+kernel path is allclose-gated — TPU VPU contraction may fuse the
+multiply-accumulate).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import default_interpret, tpu_compiler_params
+
+
+def _kernel(w_ref, g_ref, x_ref, o_ref):
+    k = pl.program_id(1)
+    t = x_ref[...] * w_ref[0, k]
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = t
+
+    @pl.when(k > 0)
+    def _acc():
+        o_ref[...] += t
+
+    @pl.when(k == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[...] += g_ref[...]
+
+
+def cohort_fold(g, x, w, *, block_n=2048, interpret=None):
+    """g: (1, N) f32 base; x: (K, N) f32 stacked cohort; w: (1, K) f32
+    -> (1, N) f32.  N must divide block_n (the wrapper pads)."""
+    if interpret is None:
+        interpret = default_interpret()
+    K, N = x.shape
+    bn = min(block_n, N)
+    assert N % bn == 0
+    grid = (N // bn, K)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, K), lambda i, k: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i, k: (0, i)),
+            pl.BlockSpec((1, bn), lambda i, k: (k, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda i, k: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, N), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(w, g, x)

@@ -15,6 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import cohort_fold as _cf
 from repro.kernels import decode_attention as _da
 from repro.kernels import lora_matmul as _lm
 from repro.kernels import rank_importance as _ri
@@ -77,6 +78,46 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=None, ring=False,
     out = _da.decode_attention(q, k_cache, v_cache, pos, window=window,
                                ring=ring, block_s=bs, interpret=default_interpret())
     return out[:, None] if squeeze else out
+
+
+def cohort_fold(base, stacked, w, *, block_n=2048):
+    """base + Σ_k w[k]·stacked[k], folded sequentially in client order.
+
+    base: any shape; stacked: (K,) + base.shape; w: (K,) float32.  Plain
+    traceable function (no jit of its own) so the server aggregators
+    (core/aggregate.py) can inline it per pytree leaf inside one compiled
+    program.
+
+    Backend split: on non-TPU hosts this lowers to one elementwise product
+    ``stacked * w`` followed by a lax.scan of pure adds — each product is
+    rounded separately *before* the fold, so XLA:CPU cannot contract the
+    multiply-accumulate into an FMA, and the result is bit-exact against
+    the eager ``tree_weighted_sum`` reference (tests/test_server_hotpath.py
+    asserts bytes-equality).  The scan starts from a zeros carry and folds
+    every row (NOT from ``pw[0]`` over ``pw[1:]``): a length-1 scan tail
+    gets fully unrolled by XLA, which puts the k=1 multiply adjacent to
+    the add again and re-enables the FMA contraction — the zeros-carry
+    form stays exact for every K >= 1.  On TPU it dispatches the Mosaic
+    kernel (kernels/cohort_fold.py), which keeps each output block
+    VMEM-resident across the K accumulation steps; that path is
+    allclose-gated.
+    """
+    if default_interpret():
+        pw = stacked * w.reshape((-1,) + (1,) * base.ndim)
+        acc, _ = jax.lax.scan(lambda a, p: (a + p, None),
+                              jnp.zeros_like(base), pw)
+        return base + acc
+    K = stacked.shape[0]
+    g2 = base.astype(jnp.float32).reshape(1, -1)
+    x2 = stacked.astype(jnp.float32).reshape(K, -1)
+    N = g2.shape[1]
+    bn = min(block_n, round_up(N, 128))
+    Np = round_up(N, bn)
+    g2 = _pad_axis(g2, Np, 1)
+    x2 = _pad_axis(x2, Np, 1)
+    out = _cf.cohort_fold(g2, x2, w.reshape(1, K).astype(jnp.float32),
+                          block_n=bn, interpret=False)
+    return out[0, :N].reshape(base.shape).astype(base.dtype)
 
 
 @jax.jit

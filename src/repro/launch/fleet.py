@@ -127,7 +127,8 @@ def serve(cfg, fed, train_ds, test_ds, client_indices,
     server = SyncServer(fed.method, adapters,
                         r_G=federation.adapter_rank(fed),
                         client_rank_list=ctx.client_rank_list,
-                        hetlora_gamma=fed.hetlora_gamma)
+                        hetlora_gamma=fed.hetlora_gamma,
+                        impl=fed.server_impl)
     bcaster = Broadcaster(fed.downlink_codec)
     history = {"round": [], "acc": [], "loss": [], "uploaded": [],
                "downloaded": [], "uploaded_cum": 0.0, "downloaded_cum": 0.0,

@@ -30,7 +30,7 @@ from repro.obs import log
 def train_lm_federated(cfg, *, rounds, n_clients, rank, global_rank,
                        batch_size, seq_len, lr, seed=0, steps_per_round=4,
                        method="lora_a2", executor="looped",
-                       step_time_s=0.01):
+                       step_time_s=0.01, server_impl="compiled"):
     """Decoder-LM federated fine-tuning on synthetic shards (CPU track)."""
     data = make_lm_stream(seed, vocab=cfg.vocab_size, seq_len=seq_len,
                           n_seqs=n_clients * batch_size * steps_per_round)
@@ -39,7 +39,8 @@ def train_lm_federated(cfg, *, rounds, n_clients, rank, global_rank,
     fed = FedConfig(method=method, rank=rank, global_rank=global_rank,
                     rounds=rounds, local_epochs=1, batch_size=batch_size,
                     lr=lr, n_clients=n_clients, eval_every=max(1, rounds // 4),
-                    seed=seed, executor=executor, step_time_s=step_time_s)
+                    seed=seed, executor=executor, step_time_s=step_time_s,
+                    server_impl=server_impl)
     return run_federated(cfg, fed, data, None, client_idx)
 
 
@@ -65,6 +66,13 @@ def main():
                     help="cohort compute backend (core/executors.py); "
                          "fp32 sync trajectories are bit-identical, "
                          "vectorized runs the round as one compiled step")
+    ap.add_argument("--server-impl", default="compiled",
+                    choices=["compiled", "python"],
+                    help="cohort aggregation backend (comm/server.py); "
+                         "'compiled' stacks the cohort's decoded uploads "
+                         "and folds them in one jitted program, bit-exact "
+                         "vs the eager 'python' reference for the delta "
+                         "methods")
     ap.add_argument("--step-time", default="0.01",
                     help="simulated seconds per local step, or 'auto' to "
                          "calibrate from the roofline model")
@@ -93,7 +101,8 @@ def main():
                         batch_size=args.batch_size, lr=args.lr,
                         n_clients=args.clients, seed=args.seed,
                         eval_every=max(1, args.rounds // 5),
-                        executor=args.executor, step_time_s=step_time)
+                        executor=args.executor, step_time_s=step_time,
+                        server_impl=args.server_impl)
         hist = run_federated(cfg, fed, train, test, parts)
         for r, acc, up in zip(hist["round"], hist["acc"], hist["uploaded"]):
             log.info(f"round {r:3d}  acc {acc:.4f}  uploaded {up:.3e}")
@@ -103,7 +112,7 @@ def main():
             rank=args.rank_budget, global_rank=args.global_rank,
             batch_size=min(args.batch_size, 8), seq_len=64, lr=args.lr,
             seed=args.seed, method=args.method, executor=args.executor,
-            step_time_s=step_time)
+            step_time_s=step_time, server_impl=args.server_impl)
         for r, loss, up in zip(hist["round"], hist["loss"], hist["uploaded"]):
             log.info(f"round {r:3d}  loss {loss:.4f}  uploaded {up:.3e}")
     log.info(f"done in {time.time()-t0:.1f}s")

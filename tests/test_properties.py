@@ -240,3 +240,49 @@ def test_lora_matmul_kernel_property(seed):
     got = ops.lora_matmul(x, w, a, b, scale=1.5)
     want = ref.lora_matmul_ref(x, w, a, b, scale=1.5)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+@given(st.integers(1, 6),
+       st.lists(st.floats(0.05, 50.0), min_size=6, max_size=6),
+       st.integers(0, 500),
+       st.sampled_from(["fl_lora", "ffa_lora", "lora_a2", "flexlora",
+                        "hetlora"]))
+@settings(max_examples=15, deadline=None)
+def test_aggregation_weight_renormalization_property(n_subset, raw_weights,
+                                                     seed, method):
+    """Cohort aggregation is invariant to the scale of upload weights: an
+    arbitrary subset of uploads with arbitrary positive weights folds to
+    the same state as the identical subset carrying the pre-normalized
+    weights (w_k / sum w), for every method and both server backends —
+    aggregate_cohort renormalizes over exactly the uploads it was given
+    (tests/test_server_hotpath.py holds the deterministic twin)."""
+    from repro.comm import codec
+    from repro.comm.server import ClientUpdate, aggregate_cohort
+    from repro.utils import tree_sub
+
+    def tiny(s, r=4, din=6, dout=5):
+        rng = np.random.default_rng(s)
+        mk = lambda: {"a": rng.normal(size=(din, r)).astype(np.float32),
+                      "b": rng.normal(size=(r, dout)).astype(np.float32)}
+        return {"blocks": {"0": {"q": mk()}, "1": {"v": mk()}}}
+
+    g0 = tiny(0)
+    masks = selection.masks_like(g0)
+    rng = np.random.default_rng(seed)
+    subset = sorted(rng.choice(6, size=n_subset, replace=False).tolist())
+    raw = [raw_weights[c] for c in subset]
+    norm = [w / sum(raw) for w in raw]
+    kw = {"r_G": 4} if method == "flexlora" else (
+        {"client_rank_list": [1, 2, 2, 4, 4, 3], "hetlora_gamma": 0.9}
+        if method == "hetlora" else {})
+    for impl in ("python", "compiled"):
+        outs = []
+        for weights in (raw, norm):
+            ups = [ClientUpdate(
+                c, codec.encode(tree_sub(tiny(10 + c), g0), masks, 2),
+                w, 0, 2) for c, w in zip(subset, weights)]
+            new, _ = aggregate_cohort(method, g0, ups, impl=impl, **kw)
+            outs.append(new)
+        for x, y in zip(jax.tree.leaves(outs[0]), jax.tree.leaves(outs[1])):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-5, rtol=1e-5)

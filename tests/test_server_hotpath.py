@@ -1,0 +1,416 @@
+"""Server hot path: the compiled stacked aggregation backend vs the eager
+python reference (comm/server.aggregate_cohort, core/aggregate.*_stacked),
+the batched wire decode (codec.decode_stacked), the GenServer decode-once
+cache, and the opt-in streaming accumulator.
+
+Parity contract (docs/ARCHITECTURE.md, "Server hot path"):
+
+  * impl="compiled" is BIT-EXACT vs impl="python" for every method —
+    including flexlora, whose in-jit SVD happens to be bit-identical on
+    this build; the documented guarantee for flexlora is tolerance-level
+    (1e-5) so a LAPACK/XLA version bump cannot break the suite.
+  * decode_stacked row k is bit-identical to decode(payload_k).
+  * GenServer decodes each payload at most once per generation lifecycle
+    (flush, stale merge, partial close all reuse the cache).
+  * streaming=True folds uploads in ARRIVAL order, so it is tolerance-
+    gated (fp32 sums reassociate), never bit-gated.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.comm import codec
+from repro.comm.server import (ClientUpdate, GenServer, SyncServer,
+                               aggregate_cohort)
+from repro.configs.base import get_config
+from repro.core import lora, selection
+from repro.core.federation import FedConfig, run_federated
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import make_classification
+from repro.utils import tree_sub
+
+CFG = get_config("roberta-sim")
+METHODS = ["fl_lora", "ffa_lora", "lora_a2", "flexlora", "hetlora"]
+RANKS16 = [1, 2, 2, 4, 4, 4, 3, 2, 1, 4, 2, 3, 4, 1, 2, 4]
+
+
+def _tiny_adapters(seed, r=4, din=6, dout=5):
+    rng = np.random.default_rng(seed)
+    return {"blocks": {
+        "0": {"q": {"a": rng.normal(size=(din, r)).astype(np.float32),
+                    "b": rng.normal(size=(r, dout)).astype(np.float32)}},
+        "1": {"v": {"a": rng.normal(size=(din, r)).astype(np.float32),
+                    "b": rng.normal(size=(r, dout)).astype(np.float32)}}}}
+
+
+def _upload(origin, seed, cid, gen=0, weight=1.0, nsel=None, parity=2):
+    delta = tree_sub(_tiny_adapters(seed), origin)
+    masks = selection.masks_like(origin)
+    if nsel is not None:                       # sparse row selection
+        rng = np.random.default_rng(seed)
+
+        def _sparse(m):
+            keep = rng.random(np.asarray(m).shape) < nsel
+            keep.reshape(-1)[0] = True         # never an empty module
+            return keep.astype(np.float32)
+
+        masks = {p: _sparse(m) for p, m in masks.items()}
+    payload = codec.encode(delta, masks, parity)
+    return ClientUpdate(cid, payload, weight, gen, parity)
+
+
+def _cohort(n, weights=None, nsel=None):
+    g0 = _tiny_adapters(0)
+    weights = weights or [0.25 * (k + 1) for k in range(n)]
+    return g0, [_upload(g0, 100 + k, k, weight=weights[k], nsel=nsel)
+                for k in range(n)]
+
+
+def _bit_equal(t1, t2):
+    return all(np.asarray(x).tobytes() == np.asarray(y).tobytes()
+               for x, y in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)))
+
+
+def _max_diff(t1, t2):
+    return max(float(np.max(np.abs(np.asarray(x, np.float64)
+                                   - np.asarray(y, np.float64))))
+               for x, y in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)))
+
+
+def _agg_kw(method):
+    if method == "flexlora":
+        return {"r_G": 4}
+    if method == "hetlora":
+        return {"client_rank_list": RANKS16, "hetlora_gamma": 0.9}
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# compiled vs python: bit-exact (tolerance documented for flexlora)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_clients", [1, 3, 7])
+@pytest.mark.parametrize("method", METHODS)
+def test_compiled_matches_python_bit_exact(method, n_clients):
+    g0, ups = _cohort(n_clients)
+    kw = _agg_kw(method)
+    ref, dref = aggregate_cohort(method, g0, ups, impl="python", **kw)
+    new, dnew = aggregate_cohort(method, g0, ups, impl="compiled", **kw)
+    if method == "flexlora":
+        # documented tolerance for the batched in-jit SVD (bit-identical
+        # on this build, but the guarantee survives a LAPACK/XLA bump)
+        assert _max_diff(ref, new) < 1e-5
+    else:
+        assert _bit_equal(ref, new)
+    for a, b in zip(dref, dnew):
+        assert _bit_equal(a, b)                # decoded deltas round-trip
+
+
+@pytest.mark.parametrize("method", ["fl_lora", "lora_a2", "hetlora"])
+def test_compiled_matches_python_sparse_masks(method):
+    """Partial row selections (heterogeneous nsel per client) decode into
+    dense zero-filled rows; the stacked fold must agree bit-for-bit."""
+    g0, ups = _cohort(5, nsel=0.6)
+    kw = _agg_kw(method)
+    ref, _ = aggregate_cohort(method, g0, ups, impl="python", **kw)
+    new, _ = aggregate_cohort(method, g0, ups, impl="compiled", **kw)
+    assert _bit_equal(ref, new)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_sync_server_compiled_matches_python(method):
+    """The same parity holds one level up, through SyncServer state."""
+    g0, ups = _cohort(4)
+    kw = dict(r_G=4, client_rank_list=RANKS16, hetlora_gamma=0.9)
+    srvs = {impl: SyncServer(method, _tiny_adapters(0), impl=impl, **kw)
+            for impl in ("python", "compiled")}
+    for srv in srvs.values():
+        srv.aggregate_round(ups)
+    if method == "flexlora":
+        assert _max_diff(srvs["python"].adapters,
+                         srvs["compiled"].adapters) < 1e-5
+    else:
+        assert _bit_equal(srvs["python"].adapters, srvs["compiled"].adapters)
+
+
+def test_real_config_adapters_compiled_parity():
+    """Same check on real model-shaped adapters (leading block dims) so the
+    stacked reshapes in decode_stacked see a multi-axis lead."""
+    g0 = lora.init_adapters(CFG, jax.random.PRNGKey(0), 4)
+    key = jax.random.PRNGKey(1)
+    ups = []
+    for k in range(3):
+        out = jax.tree.map(lambda x: x, g0)
+        for path, ab in lora.iter_modules(out):
+            k1, k2, key = jax.random.split(key, 3)
+            h = selection._get(out, path)
+            h["a"] = jax.random.normal(k1, ab["a"].shape, ab["a"].dtype)
+            h["b"] = jax.random.normal(k2, ab["b"].shape, ab["b"].dtype)
+        delta = tree_sub(out, g0)
+        payload = codec.encode(delta, selection.masks_like(g0), 2)
+        ups.append(ClientUpdate(k, payload, 1.0 + k, 0, 2))
+    ref, _ = aggregate_cohort("fl_lora", g0, ups, impl="python")
+    new, _ = aggregate_cohort("fl_lora", g0, ups, impl="compiled")
+    assert _bit_equal(ref, new)
+
+
+def test_unknown_impl_rejected():
+    g0, ups = _cohort(2)
+    with pytest.raises(ValueError, match="impl"):
+        aggregate_cohort("fl_lora", g0, ups, impl="turbo")
+    with pytest.raises(ValueError, match="impl"):
+        SyncServer("fl_lora", g0, impl="turbo")
+    with pytest.raises(ValueError, match="impl"):
+        GenServer("fl_lora", g0, gen_size=2, impl="turbo")
+
+
+# ---------------------------------------------------------------------------
+# batched decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("nsel", [None, 0.5])
+def test_decode_stacked_rows_match_decode(nsel):
+    g0, ups = _cohort(6, nsel=nsel)
+    stacked = codec.decode_stacked([u.payload for u in ups])
+    for k, u in enumerate(ups):
+        row = jax.tree.map(lambda x, _k=k: x[_k], stacked)
+        assert _bit_equal(codec.decode(u.payload), row)
+
+
+def test_decode_stacked_heterogeneous_shapes_fallback():
+    """Payloads whose module signatures disagree (different ranks here)
+    cannot share flat buffers; decode_stacked falls back to per-payload
+    decode + stack and still returns one leading-axis tree."""
+    g0a = _tiny_adapters(0, r=4)
+    g0b = _tiny_adapters(0, r=4, dout=5)
+    pa = codec.encode(tree_sub(_tiny_adapters(1), g0a),
+                      selection.masks_like(g0a), 2)
+    pb = codec.encode(tree_sub(_tiny_adapters(2), g0b),
+                      selection.masks_like(g0b), 2)
+    stacked = codec.decode_stacked([pa, pb])
+    assert _bit_equal(codec.decode(pa),
+                      jax.tree.map(lambda x: x[0], stacked))
+    assert _bit_equal(codec.decode(pb),
+                      jax.tree.map(lambda x: x[1], stacked))
+
+
+def test_decode_call_counter_counts_payloads():
+    g0, ups = _cohort(4)
+    n0 = codec.decode_call_count()
+    codec.decode(ups[0].payload)
+    assert codec.decode_call_count() == n0 + 1
+    codec.decode_stacked([u.payload for u in ups])
+    assert codec.decode_call_count() == n0 + 5
+
+
+# ---------------------------------------------------------------------------
+# GenServer: decode-once audit (each payload decoded at most once per
+# generation lifecycle — on-time flush, stale merge, partial close)
+# ---------------------------------------------------------------------------
+
+
+def _gen_server(method="fl_lora", gen_size=2, **kw):
+    base = dict(r_G=4, client_rank_list=RANKS16, hetlora_gamma=0.9)
+    base.update(kw)
+    return GenServer(method, _tiny_adapters(0), gen_size=gen_size, **base)
+
+
+@pytest.mark.parametrize("impl", ["python", "compiled"])
+def test_genserver_decodes_each_payload_once(impl):
+    g0 = _tiny_adapters(0)
+    srv = _gen_server(gen_size=2, impl=impl)
+    for c in range(4):
+        srv.begin(c)
+    n0 = codec.decode_call_count()
+    srv.receive(_upload(g0, 10, 0, 0))
+    srv.receive(_upload(g0, 11, 1, 0))          # flush -> 2 payloads decoded
+    assert codec.decode_call_count() == n0 + 2
+
+
+@pytest.mark.parametrize("impl", ["python", "compiled"])
+def test_genserver_stale_merge_decodes_once(impl):
+    """A stale upload is decoded when it arrives and NOT re-decoded when
+    its generation later closes — the per-generation cache carries it."""
+    g0 = _tiny_adapters(0)
+    srv = _gen_server(gen_size=2, impl=impl, staleness_alpha=0.5,
+                      stale_policy="merge")
+    for c in range(4):
+        srv.begin(c)
+    srv.receive(_upload(g0, 20, 0, 0))
+    srv.receive(_upload(g0, 21, 1, 0))          # flush -> version 1
+    stale = _upload(g0, 22, 2, 0)
+    n0 = codec.decode_call_count()
+    srv.receive(stale)                          # buffered: exactly 1 decode
+    assert codec.decode_call_count() == n0 + 1
+    srv.receive(_upload(g0, 23, 3, 0))          # closes gen 0: 1 more decode
+    assert codec.decode_call_count() == n0 + 2  # nothing re-decoded at close
+
+
+@pytest.mark.parametrize("impl", ["python", "compiled"])
+def test_genserver_close_partial_reuses_cache(impl):
+    g0 = _tiny_adapters(0)
+    srv = _gen_server(gen_size=3, impl=impl)
+    srv.begin(0)
+    n0 = codec.decode_call_count()
+    srv.receive(_upload(g0, 30, 0, 0))
+    assert codec.decode_call_count() == n0 + 1
+    assert srv.close_partial()                  # aggregates from cache
+    assert codec.decode_call_count() == n0 + 1
+
+
+# ---------------------------------------------------------------------------
+# GenServer compiled / streaming differential
+# ---------------------------------------------------------------------------
+
+
+def _drive(srv, g0, order, gen_of, weight_of):
+    for c in range(4):
+        srv.begin(c)
+    for cid in order:
+        srv.receive(_upload(g0, 40 + cid, cid, gen_of[cid],
+                            weight=weight_of[cid]))
+    srv.finalize()
+    return srv.adapters
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_genserver_compiled_matches_python(method):
+    g0 = _tiny_adapters(0)
+    gen_of = {0: 0, 1: 0, 2: 0, 3: 0}
+    w = {0: 0.7, 1: 1.3, 2: 0.5, 3: 0.9}
+    outs = {impl: _drive(_gen_server(method, gen_size=2, impl=impl),
+                         g0, [1, 0, 3, 2], gen_of, w)
+            for impl in ("python", "compiled")}
+    if method == "flexlora":
+        assert _max_diff(outs["python"], outs["compiled"]) < 1e-5
+    else:
+        assert _bit_equal(outs["python"], outs["compiled"])
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_genserver_streaming_matches_batched(method):
+    """streaming=True accumulates partial sums on arrival; the finalized
+    state matches the batched flush at fp32 reassociation tolerance,
+    for every arrival order."""
+    g0 = _tiny_adapters(0)
+    gen_of = {0: 0, 1: 0, 2: 0, 3: 0}
+    w = {0: 0.7, 1: 1.3, 2: 0.5, 3: 0.9}
+    ref = _drive(_gen_server(method, gen_size=4, impl="python"),
+                 g0, [0, 1, 2, 3], gen_of, w)
+    for order in ([0, 1, 2, 3], [3, 1, 0, 2]):
+        out = _drive(_gen_server(method, gen_size=4, impl="compiled",
+                                 streaming=True), g0, order, gen_of, w)
+        assert _max_diff(ref, out) < 1e-5
+
+
+def test_genserver_streaming_stale_merge():
+    """The streaming accumulator also backs the stale-merge close path."""
+    g0 = _tiny_adapters(0)
+
+    def run(streaming):
+        srv = _gen_server("fl_lora", gen_size=2, impl="compiled",
+                          streaming=streaming, staleness_alpha=0.5,
+                          stale_policy="merge")
+        for c in range(4):
+            srv.begin(c)
+        srv.receive(_upload(g0, 50, 0, 0, weight=0.7))
+        srv.receive(_upload(g0, 51, 1, 0, weight=1.3))
+        srv.receive(_upload(g0, 52, 2, 0, weight=0.5))   # stale, buffered
+        srv.receive(_upload(g0, 53, 3, 0, weight=0.9))   # closes gen 0
+        srv.finalize()
+        return srv.adapters
+
+    assert _max_diff(run(False), run(True)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# weight renormalization invariance (deterministic twin of the hypothesis
+# property in tests/test_properties.py)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["python", "compiled"])
+@pytest.mark.parametrize("method", METHODS)
+def test_weight_scale_invariance(method, impl):
+    """Aggregation depends only on relative weights: scaling every upload
+    weight by a positive constant, or pre-normalizing them to sum to one,
+    leaves the folded state unchanged (up to fp64 division rounding)."""
+    raw = [0.3, 2.0, 0.7, 1.1, 0.9]
+    g0, ups = _cohort(5, weights=raw)
+    kw = _agg_kw(method)
+    base, _ = aggregate_cohort(method, g0, ups, impl=impl, **kw)
+    for variant in ([w * 37.5 for w in raw],
+                    [w / sum(raw) for w in raw]):
+        vups = [ClientUpdate(u.client_id, u.payload, wv, u.version, u.parity)
+                for u, wv in zip(ups, variant)]
+        out, _ = aggregate_cohort(method, g0, vups, impl=impl, **kw)
+        assert _max_diff(base, out) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: full federated trajectories, python vs compiled server,
+# both executors (the acceptance gate for the PR)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def data():
+    train, test = make_classification(0, n_classes=8, vocab=CFG.vocab_size,
+                                      seq_len=16, n_train=480, n_test=160)
+    parts = dirichlet_partition(0, train.labels, 4, alpha=0.5)
+    return train, test, parts
+
+
+def _fed(method, executor, **kw):
+    base = dict(method=method, rank=2, global_rank=4, rounds=2,
+                local_epochs=1, batch_size=32, n_clients=4, eval_every=1,
+                seed=0, executor=executor)
+    if method == "hetlora":
+        base["client_ranks"] = [1, 2, 2, 4]
+    base.update(kw)
+    return FedConfig(**base)
+
+
+def _impl_pair(data, method, executor, **kw):
+    train, test, parts = data
+    runs = [run_federated(CFG, _fed(method, executor, server_impl=impl, **kw),
+                          train, test, parts)
+            for impl in ("python", "compiled")]
+    return runs
+
+
+def _assert_same_trajectory(h_ref, h_new, *, bit=True):
+    assert h_ref["round"] == h_new["round"]
+    assert h_ref["uploaded"] == h_new["uploaded"]
+    if bit:
+        assert h_ref["acc"] == h_new["acc"]
+        assert h_ref["loss"] == h_new["loss"]
+        for x, y in zip(jax.tree.leaves(h_ref["adapters"]),
+                        jax.tree.leaves(h_new["adapters"])):
+            assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+    else:
+        assert _max_diff(h_ref["adapters"], h_new["adapters"]) < 1e-4
+
+
+@pytest.mark.parametrize("executor", ["looped", "vectorized"])
+def test_trajectory_lora_a2_compiled_server(executor, data):
+    _assert_same_trajectory(*_impl_pair(data, "lora_a2", executor))
+
+
+def test_trajectory_hetlora_async_compiled_server(data):
+    _assert_same_trajectory(
+        *_impl_pair(data, "hetlora", "looped", server_mode="async",
+                    buffer_size=4))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["sync", "async"])
+@pytest.mark.parametrize("executor", ["looped", "vectorized"])
+@pytest.mark.parametrize("method", METHODS)
+def test_trajectory_matrix_compiled_server(method, executor, mode, data):
+    kw = {"server_mode": "async", "buffer_size": 4} if mode == "async" else {}
+    bit = method != "flexlora"
+    _assert_same_trajectory(*_impl_pair(data, method, executor, **kw),
+                            bit=bit)
